@@ -1,0 +1,47 @@
+"""Fig 4 / Fig 9: convergence parity.
+
+(a) cooperative vs independent minibatching at equal global batch size,
+(b) dependent minibatching across kappa — validation F1 must not degrade
+for moderate kappa (paper: < 0.1% up to kappa=256; our small-scale proxy
+checks the same ordering within noise).
+"""
+from __future__ import annotations
+
+import numpy as np
+
+from benchmarks.common import Csv
+from repro.data.synthetic import SyntheticGraphDataset
+from repro.data import rmat_graph
+from repro.models.gnn import GNNConfig
+from repro.train.loop import TrainConfig, evaluate, train_gnn
+
+STEPS = 60
+
+
+def run() -> Csv:
+    g = rmat_graph(scale=10, edge_factor=8, max_degree=32, seed=0)
+    ds = SyntheticGraphDataset(g, feature_dim=32, num_classes=8, seed=0)
+    cfg = GNNConfig(model="gcn", num_layers=2, in_dim=32, hidden_dim=64, num_classes=8)
+    csv = Csv(["experiment", "setting", "final_loss", "val_f1"])
+
+    for mode in ("independent", "cooperative"):
+        tc = TrainConfig(mode=mode, num_pes=4, local_batch=32, num_steps=STEPS,
+                         fanout=5, eval_every=0, seed=3)
+        r = train_gnn(ds, cfg, tc)
+        f1 = evaluate(ds, cfg, r.params, tc)
+        csv.add("coop_vs_indep", mode, round(float(np.mean(r.losses[-8:])), 4),
+                round(f1, 4))
+
+    for kappa in (1, 16, 64, None):
+        tc = TrainConfig(mode="cooperative", num_pes=2, local_batch=64,
+                         num_steps=STEPS, fanout=5, kappa=kappa, eval_every=0,
+                         seed=3)
+        r = train_gnn(ds, cfg, tc)
+        f1 = evaluate(ds, cfg, r.params, tc)
+        csv.add("dependent_kappa", kappa if kappa else "inf",
+                round(float(np.mean(r.losses[-8:])), 4), round(f1, 4))
+    return csv
+
+
+if __name__ == "__main__":
+    run().emit()

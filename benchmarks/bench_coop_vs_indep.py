@@ -1,0 +1,124 @@
+"""Tables 4/5/7: cooperative vs independent per-PE work + modeled runtime.
+
+Counts per-PE vertices/edges/communication (Table 7 columns) for both
+minibatching modes at identical global batch size, across P in {2,4,8},
+then converts them to modeled stage times with the paper's bandwidth
+model (Table 1) using TPU v5e constants — the CPU-container stand-in for
+the paper's wall-clock Tables 4/5.
+
+    sampling  ~ |S^l| / beta
+    loading   ~ |S^L| d rho / beta  (+ A2A c/alpha for cooperative)
+    F/B       ~ (flops/gamma_eff)   (+ A2A d c/alpha for cooperative)
+"""
+from __future__ import annotations
+
+import jax.numpy as jnp
+import numpy as np
+
+from benchmarks.common import Csv, bench_graph
+from repro.core.cooperative import (
+    CoopCapacityPlan,
+    SimExecutor,
+    build_cooperative_minibatch,
+    plan_stats,
+)
+from repro.core.minibatch import CapacityPlan, build_minibatch, epoch_stats
+from repro.core.partition import cross_edge_ratio, hash_partition, make_partition
+from repro.core.rng import DependentRNG
+from repro.core.samplers import make_sampler
+
+# TPU v5e island constants (DESIGN.md §3): alpha=ICI, beta=host/DCN, gamma=HBM
+ALPHA = 50e9
+BETA = 8e9
+GAMMA = 819e9
+FEAT_DIM = 128
+HIDDEN = 1024
+TRIALS = 4
+LAYERS = 3
+GLOBAL_BATCH = 512
+
+
+def _measure(g, P: int, sampler_name: str, partition: str = "hash"):
+    b = GLOBAL_BATCH // P
+    part = make_partition(partition, g, P)
+    owner = np.asarray(part.owner)
+    owned = [np.nonzero(owner == p)[0] for p in range(P)]
+    IM = np.iinfo(np.int32).max
+    sampler = make_sampler(sampler_name, fanout=5)
+    caps_i = CapacityPlan.geometric(b, LAYERS, 5, g.num_vertices)
+    caps_c = CoopCapacityPlan.geometric(b, LAYERS, 5, g.num_vertices, P)
+    ex = SimExecutor(P)
+    indep, coop = [], []
+    for t in range(TRIALS):
+        rng = DependentRNG(base_seed=31 * t, kappa=1, step=0)
+        rng_np = np.random.default_rng(t)
+        # independent: P separate batches (max per-PE counts)
+        st_i = {"S3": 0, "E": 0}
+        for p in range(P):
+            seeds = rng_np.choice(g.num_vertices, size=b, replace=False)
+            mb = build_minibatch(
+                g, sampler, jnp.asarray(seeds, jnp.int32), rng, LAYERS, caps_i
+            )
+            s = epoch_stats(mb)
+            st_i["S3"] = max(st_i["S3"], s[f"S{LAYERS}"])
+            st_i["E"] = max(st_i["E"], sum(s[f"E{l}"] for l in range(LAYERS)))
+        indep.append(st_i)
+        # cooperative: one global batch, owned seeds
+        seeds = np.full((P, b), IM, np.int32)
+        for p in range(P):
+            seeds[p] = rng_np.choice(owned[p], size=min(b, len(owned[p])), replace=False)
+        mb = build_cooperative_minibatch(
+            g, sampler, part, jnp.asarray(seeds), rng, LAYERS, caps_c, ex
+        )
+        s = plan_stats(mb, ex)
+        coop.append(
+            {
+                "S3": s["inputs"],
+                "E": sum(s[f"E{l}"] for l in range(LAYERS)),
+                "comm": sum(s[f"comm{l+1}"] for l in range(LAYERS)),
+            }
+        )
+    avg = lambda rows, k: float(np.mean([r[k] for r in rows]))
+    c = cross_edge_ratio(g, part)
+    return (
+        {"S3": avg(indep, "S3"), "E": avg(indep, "E"), "comm": 0.0},
+        {"S3": avg(coop, "S3"), "E": avg(coop, "E"), "comm": avg(coop, "comm")},
+        c,
+    )
+
+
+def _model_time_us(stats, mode: str) -> dict:
+    """Paper Table 1 bandwidth model -> microseconds per stage."""
+    f = 4  # bytes/feature
+    load = stats["S3"] * FEAT_DIM * f / BETA
+    flops = 2 * stats["E"] * FEAT_DIM * HIDDEN  # 1st-layer-dominated F/B proxy
+    fb = 3 * flops / (0.3 * GAMMA * 100)  # effective flop rate proxy
+    comm = stats["comm"] * HIDDEN * f / ALPHA if mode == "coop" else 0.0
+    return {
+        "load_us": 1e6 * (load + (stats["comm"] * FEAT_DIM * f / ALPHA if mode == "coop" else 0)),
+        "fb_us": 1e6 * (fb + comm),
+    }
+
+
+def run() -> Csv:
+    g = bench_graph(scale=12)
+    csv = Csv(
+        ["sampler", "P", "mode", "partition", "S3_perPE", "E_perPE",
+         "comm_perPE", "cross_edge_c", "load_us_model", "fb_us_model"]
+    )
+    for sampler_name in ("labor0", "ns"):
+        for P in (2, 4, 8):
+            for partition in ("hash", "bfs"):
+                indep, coop, c = _measure(g, P, sampler_name, partition)
+                for mode, st in (("indep", indep), ("coop", coop)):
+                    t = _model_time_us(st, mode)
+                    csv.add(
+                        sampler_name, P, mode, partition,
+                        int(st["S3"]), int(st["E"]), int(st["comm"]),
+                        round(c, 3), round(t["load_us"], 1), round(t["fb_us"], 1),
+                    )
+    return csv
+
+
+if __name__ == "__main__":
+    run().emit()

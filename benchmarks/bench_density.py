@@ -1,0 +1,20 @@
+"""Thm 3.3: vertex-induced subgraph density vs batch size (nondecreasing)."""
+from __future__ import annotations
+
+from benchmarks.common import Csv, bench_graph
+from repro.core.theory import measure_density_curve
+
+
+def run(trials: int = 8) -> Csv:
+    g = bench_graph()
+    bs, density = measure_density_curve(
+        g, [64, 128, 256, 512, 1024, 2048], trials=trials
+    )
+    csv = Csv(["batch_size", "density_E_per_V"])
+    for b, d in zip(bs, density):
+        csv.add(b, round(d, 4))
+    return csv
+
+
+if __name__ == "__main__":
+    run().emit()

@@ -1,0 +1,47 @@
+"""Kernel microbenchmarks: Pallas interpret correctness + oracle timing.
+
+Wall-clock on CPU measures the *oracle* path (the TPU kernels cannot be
+timed off-hardware); the value of this table is the shape sweep — it is
+the per-kernel performance harness a TPU run would fill in.
+"""
+from __future__ import annotations
+
+import jax.numpy as jnp
+import numpy as np
+
+from benchmarks.common import Csv
+from repro.kernels.spmm.ref import spmm_ref
+from repro.kernels.gather.ref import gather_ref
+from repro.kernels.seg_softmax.ref import seg_softmax_ref
+from repro.utils.timing import bench_fn
+
+R = np.random.default_rng(0)
+
+
+def run() -> Csv:
+    csv = Csv(["kernel", "shape", "us_per_call", "gbytes_per_s"])
+    for S, d, n, w in [(4096, 128, 1024, 16), (16384, 256, 4096, 16)]:
+        src = jnp.asarray(R.standard_normal((S, d)).astype(np.float32))
+        idx = jnp.asarray(R.integers(0, S, (n, w)).astype(np.int32))
+        mask = jnp.asarray(R.random((n, w)) < 0.7)
+        us = bench_fn(lambda a, b, c: spmm_ref(a, b, c, mean=True), src, idx, mask)
+        bytes_moved = (n * w * d + n * d) * 4
+        csv.add("spmm_mean", f"{S}x{d}<-{n}x{w}", round(us, 1),
+                round(bytes_moved / us / 1e3, 2))
+    for V, d, n in [(65536, 128, 8192), (262144, 256, 16384)]:
+        tab = jnp.asarray(R.standard_normal((V, d)).astype(np.float32))
+        ids = jnp.asarray(R.integers(0, V, n).astype(np.int32))
+        us = bench_fn(gather_ref, tab, ids)
+        csv.add("paged_gather", f"{V}x{d}[{n}]", round(us, 1),
+                round(n * d * 4 / us / 1e3, 2))
+    for n, w in [(8192, 16), (32768, 32)]:
+        e = jnp.asarray(R.standard_normal((n, w)).astype(np.float32))
+        m = jnp.asarray(R.random((n, w)) < 0.6)
+        us = bench_fn(seg_softmax_ref, e, m)
+        csv.add("seg_softmax", f"{n}x{w}", round(us, 1),
+                round(n * w * 4 * 2 / us / 1e3, 2))
+    return csv
+
+
+if __name__ == "__main__":
+    run().emit()

@@ -1,0 +1,30 @@
+"""Fig 3 / Fig 6: work per epoch vs batch size, per sampler.
+
+Emits E[|S^L|] (concave, Thm 3.2) and E[|S^L|]/|S^0| (nonincreasing,
+Thm 3.1) for NS / LABOR-0 / LABOR-* / RW on a power-law RMAT graph.
+"""
+from __future__ import annotations
+
+from benchmarks.common import Csv, bench_graph
+from repro.core.samplers import make_sampler
+from repro.core.theory import measure_work_curve
+
+BATCHES = [16, 32, 64, 128, 256, 512, 1024]
+SAMPLERS = ["ns", "labor0", "labor*", "rw"]
+
+
+def run(trials: int = 6) -> Csv:
+    g = bench_graph()
+    csv = Csv(["sampler", "batch_size", "E_SL", "work_per_seed"])
+    for name in SAMPLERS:
+        s = make_sampler(name, fanout=5, **({"num_walks": 8} if name == "rw" else {}))
+        curve = measure_work_curve(
+            g, s, BATCHES, num_layers=3, trials=trials, fanout_for_caps=5
+        )
+        for b, e, w in zip(curve.batch_sizes, curve.expected_sl, curve.work_per_seed):
+            csv.add(name, b, round(e, 1), round(w, 3))
+    return csv
+
+
+if __name__ == "__main__":
+    run().emit()

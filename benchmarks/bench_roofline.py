@@ -1,0 +1,45 @@
+"""§Roofline summary table compiled from experiments/dryrun/*.json."""
+from __future__ import annotations
+
+import glob
+import json
+import os
+
+from benchmarks.common import Csv
+
+DRYRUN_DIR = os.path.join(os.path.dirname(__file__), "..", "experiments", "dryrun")
+
+
+def run() -> Csv:
+    csv = Csv(
+        ["arch", "shape", "mesh", "status", "bottleneck", "compute_ms",
+         "memory_ms", "collective_ms", "useful_ratio", "peak_gib"]
+    )
+    files = sorted(glob.glob(os.path.join(DRYRUN_DIR, "*.json")))
+    if not files:
+        csv.add("(run `python -m repro.launch.dryrun --all` first)",
+                "-", "-", "-", "-", 0, 0, 0, 0, 0)
+        return csv
+    for f in files:
+        with open(f) as fh:
+            r = json.load(fh)
+        if r["status"] != "ok":
+            csv.add(r.get("arch", "?"), r.get("shape", "?"), r.get("mesh", "?"),
+                    r["status"], r.get("reason", r.get("error", ""))[:40],
+                    0, 0, 0, 0, 0)
+            continue
+        roof = r["roofline"]
+        arch = r["arch"] + (f"[{r['tag']}]" if r.get("tag") else "")
+        csv.add(
+            arch, r["shape"], r["mesh"], "ok", roof["bottleneck"],
+            round(roof["compute_s"] * 1e3, 2),
+            round(roof["memory_s"] * 1e3, 2),
+            round(roof["collective_s"] * 1e3, 2),
+            round(roof["useful_ratio"], 3),
+            round(r["memory"]["peak_per_device_gb"], 2),
+        )
+    return csv
+
+
+if __name__ == "__main__":
+    run().emit()

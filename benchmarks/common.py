@@ -1,0 +1,33 @@
+"""Shared benchmark scaffolding: CSV emission + standard dataset."""
+from __future__ import annotations
+
+import sys
+from dataclasses import dataclass, field
+
+
+@dataclass
+class Csv:
+    header: list
+    rows: list = field(default_factory=list)
+
+    def add(self, *row):
+        self.rows.append(row)
+
+    def emit(self, file=sys.stdout):
+        print(",".join(map(str, self.header)), file=file)
+        for r in self.rows:
+            print(",".join(map(str, r)), file=file)
+
+
+_GRAPH_CACHE = {}
+
+
+def bench_graph(scale=11, edge_factor=8, max_degree=32, seed=0):
+    from repro.data import rmat_graph
+
+    key = (scale, edge_factor, max_degree, seed)
+    if key not in _GRAPH_CACHE:
+        _GRAPH_CACHE[key] = rmat_graph(
+            scale=scale, edge_factor=edge_factor, max_degree=max_degree, seed=seed
+        )
+    return _GRAPH_CACHE[key]

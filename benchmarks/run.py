@@ -1,0 +1,67 @@
+"""Benchmark orchestrator: one section per paper table/figure.
+
+    PYTHONPATH=src python -m benchmarks.run [--only <name>] [--fast]
+
+Sections:
+    monotonicity   Fig 3/6  (Thm 3.1/3.2 work curves per sampler)
+    density        Thm 3.3  (induced-subgraph density vs batch)
+    cache_kappa    Fig 5a/5b + Table 6 (LRU miss vs dependency kappa)
+    coop_vs_indep  Tables 4/5/7 (per-PE counts + bandwidth-model times)
+    convergence    Fig 4/9  (coop vs indep; kappa parity)
+    kernels        per-kernel shape sweep
+    roofline       §Roofline summary from experiments/dryrun/*.json
+"""
+from __future__ import annotations
+
+import argparse
+import sys
+import time
+
+
+def _section(name):
+    print(f"\n### {name}", flush=True)
+
+
+def main() -> None:
+    ap = argparse.ArgumentParser()
+    ap.add_argument("--only", default=None)
+    ap.add_argument("--fast", action="store_true")
+    args = ap.parse_args()
+
+    sections = {}
+
+    def register(name, fn):
+        sections[name] = fn
+
+    from benchmarks import (
+        bench_cache_kappa,
+        bench_convergence,
+        bench_coop_vs_indep,
+        bench_density,
+        bench_kernels,
+        bench_monotonicity,
+        bench_roofline,
+    )
+
+    register("monotonicity", lambda: bench_monotonicity.run(trials=3 if args.fast else 6))
+    register("density", lambda: bench_density.run(trials=4 if args.fast else 8))
+    register("cache_kappa", lambda: bench_cache_kappa.run(coop=not args.fast))
+    register("coop_vs_indep", bench_coop_vs_indep.run)
+    register("convergence", bench_convergence.run)
+    register("kernels", bench_kernels.run)
+    register("roofline", bench_roofline.run)
+
+    todo = [args.only] if args.only else list(sections)
+    for name in todo:
+        t0 = time.time()
+        _section(name)
+        try:
+            sections[name]().emit()
+            print(f"# {name} done in {time.time()-t0:.1f}s", flush=True)
+        except Exception as e:  # keep the suite going; report at the end
+            print(f"# {name} FAILED: {e!r}", file=sys.stderr, flush=True)
+            raise
+
+
+if __name__ == "__main__":
+    main()

@@ -1,0 +1,66 @@
+"""Serve a small LM with batched requests (decode path demo).
+
+    PYTHONPATH=src python examples/serve_lm.py [--arch gemma2-2b]
+
+Instantiates the REDUCED variant of an assigned architecture, prefills a
+batch of prompts and decodes tokens with the KV/SSM cache ``serve_step``
+— the same code path the decode dry-run shapes lower at production size.
+"""
+import argparse
+import time
+
+import jax
+import jax.numpy as jnp
+import numpy as np
+
+from repro.configs import get_config
+from repro.launch.steps import make_serve_step
+from repro.models.transformer import (
+    forward_train,
+    init_decode_state,
+    init_lm,
+)
+
+
+def main():
+    ap = argparse.ArgumentParser()
+    ap.add_argument("--arch", default="gemma2-2b")
+    ap.add_argument("--batch", type=int, default=4)
+    ap.add_argument("--prompt-len", type=int, default=16)
+    ap.add_argument("--new-tokens", type=int, default=24)
+    args = ap.parse_args()
+
+    cfg = get_config(args.arch).reduced()
+    params = init_lm(jax.random.PRNGKey(0), cfg)
+    rng = np.random.default_rng(0)
+    B, S0 = args.batch, args.prompt_len
+    prompts = jnp.asarray(rng.integers(0, cfg.vocab_size, (B, S0)), jnp.int32)
+
+    max_len = S0 + args.new_tokens
+    state = init_decode_state(cfg, B, max_len)
+    if cfg.enc_dec:
+        state["enc_out"] = jnp.zeros((B, cfg.enc_len, cfg.d_model))
+    serve = jax.jit(make_serve_step(cfg))
+
+    # prefill by stepping the decoder over the prompt (simple & exact)
+    t0 = time.time()
+    logits = None
+    for t in range(S0):
+        logits, state = serve(params, state, prompts[:, t : t + 1])
+    # sample greedily for new tokens
+    out = []
+    tok = jnp.argmax(logits, -1)[:, None].astype(jnp.int32)
+    for _ in range(args.new_tokens):
+        out.append(np.asarray(tok)[:, 0])
+        logits, state = serve(params, state, tok)
+        tok = jnp.argmax(logits, -1)[:, None].astype(jnp.int32)
+    dt = time.time() - t0
+    gen = np.stack(out, 1)
+    total = B * (S0 + args.new_tokens)
+    print(f"arch={cfg.name}  batch={B}  decoded {gen.shape[1]} tokens/seq")
+    print(f"tokens: {gen[0][:12].tolist()} ...")
+    print(f"{total / dt:.1f} tok/s on CPU (reduced config)")
+
+
+if __name__ == "__main__":
+    main()

@@ -1,0 +1,55 @@
+"""End-to-end driver: cooperative + dependent GNN training to convergence.
+
+    PYTHONPATH=src python examples/train_cooperative_gnn.py [--steps 300]
+
+The paper's kind is minibatch GNN *training*, where models are small
+(~1-3M params; the scale lives in the graph) — this driver trains the
+paper's 3-layer GCN (hidden 256) on a 16k-vertex synthetic power-law
+graph for a few hundred steps with cooperative minibatching (P=4 PEs,
+SimExecutor) and smoothed dependent batches (kappa=16), evaluating
+micro-F1 on the validation split, with checkpointing.
+"""
+import argparse
+import time
+
+import numpy as np
+
+from repro.data import rmat_graph
+from repro.data.synthetic import SyntheticGraphDataset
+from repro.models.gnn import GNNConfig
+from repro.train.checkpoint import save_checkpoint
+from repro.train.loop import TrainConfig, evaluate, train_gnn
+
+
+def main():
+    ap = argparse.ArgumentParser()
+    ap.add_argument("--steps", type=int, default=300)
+    ap.add_argument("--pes", type=int, default=4)
+    ap.add_argument("--kappa", type=int, default=16)
+    ap.add_argument("--sampler", default="labor0")
+    ap.add_argument("--out", default="/tmp/coop_gnn_ckpt")
+    args = ap.parse_args()
+
+    graph = rmat_graph(scale=14, edge_factor=8, max_degree=32, seed=0)
+    ds = SyntheticGraphDataset(graph, feature_dim=64, num_classes=16, seed=0)
+    cfg = GNNConfig(model="gcn", num_layers=3, in_dim=64, hidden_dim=256,
+                    num_classes=16)
+    tc = TrainConfig(
+        mode="cooperative", num_pes=args.pes, local_batch=64,
+        num_steps=args.steps, fanout=10, kappa=args.kappa,
+        sampler=args.sampler, eval_every=max(args.steps // 6, 1),
+    )
+    t0 = time.time()
+    result = train_gnn(ds, cfg, tc)
+    dt = time.time() - t0
+    test_f1 = evaluate(ds, cfg, result.params, tc, split="test")
+    print(f"steps={args.steps}  time={dt:.1f}s  "
+          f"loss {result.losses[0]:.3f}->{np.mean(result.losses[-10:]):.3f}")
+    print(f"val F1 trajectory: {[round(f, 3) for f in result.val_f1]}")
+    print(f"test F1: {test_f1:.3f}")
+    save_checkpoint(args.out, result.params, extra={"steps": args.steps})
+    print(f"checkpoint saved to {args.out}.npz")
+
+
+if __name__ == "__main__":
+    main()

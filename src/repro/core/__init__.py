@@ -1,0 +1,49 @@
+"""Core: the paper's contribution — cooperative & dependent minibatching."""
+from repro.core.graph import Graph, INVALID
+from repro.core.partition import Partition, make_partition, cross_edge_ratio
+from repro.core.rng import DependentRNG
+from repro.core.minibatch import (
+    CapacityPlan,
+    Minibatch,
+    MinibatchLayer,
+    build_minibatch,
+)
+from repro.core.cooperative import (
+    CoopCapacityPlan,
+    CoopLayer,
+    CoopMinibatch,
+    SimExecutor,
+    ShardExecutor,
+    build_cooperative_minibatch,
+    redistribute,
+    plan_stats,
+)
+from repro.core.dependent import DependentSchedule, NestedSchedule
+from repro.core.cache import LRUCache, CooperativeCacheArray
+from repro.core.feature_loader import FeatureStore
+
+__all__ = [
+    "Graph",
+    "INVALID",
+    "Partition",
+    "make_partition",
+    "cross_edge_ratio",
+    "DependentRNG",
+    "CapacityPlan",
+    "Minibatch",
+    "MinibatchLayer",
+    "build_minibatch",
+    "CoopCapacityPlan",
+    "CoopLayer",
+    "CoopMinibatch",
+    "SimExecutor",
+    "ShardExecutor",
+    "build_cooperative_minibatch",
+    "redistribute",
+    "plan_stats",
+    "DependentSchedule",
+    "NestedSchedule",
+    "LRUCache",
+    "CooperativeCacheArray",
+    "FeatureStore",
+]

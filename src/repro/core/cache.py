@@ -1,0 +1,89 @@
+"""LRU vertex-embedding cache simulator (§4.2, Fig. 5).
+
+The paper demonstrates dependent minibatching by measuring LRU-cache miss
+rates for vertex-embedding fetches (miss rate ∝ storage-to-PE traffic).
+True LRU is host-side control flow, so on TPU we model the *hit rate*
+with an exact simulator (numpy, ordered dict) — this is the oracle the
+Fig. 5 / Table 6 benchmarks use — and provide a batched variant for
+multi-PE (cooperative) caching where each PE caches only owned vertices,
+which is what makes cooperative feature loading "effectively increase the
+global cache size" (§4.3.1).
+"""
+from __future__ import annotations
+
+from collections import OrderedDict
+from dataclasses import dataclass, field
+
+import numpy as np
+
+_INVALID = np.iinfo(np.int32).max
+
+
+@dataclass
+class LRUCache:
+    """Exact LRU over vertex ids; counts unique-per-batch accesses."""
+
+    capacity: int
+    hits: int = 0
+    misses: int = 0
+    _store: OrderedDict = field(default_factory=OrderedDict)
+
+    def access_batch(self, ids: np.ndarray) -> int:
+        """Access the unique valid ids of one minibatch; returns #misses."""
+        ids = np.unique(np.asarray(ids).ravel())
+        ids = ids[ids != _INVALID]
+        miss_now = 0
+        for v in ids.tolist():
+            if v in self._store:
+                self._store.move_to_end(v)
+                self.hits += 1
+            else:
+                miss_now += 1
+                self.misses += 1
+                self._store[v] = True
+                if len(self._store) > self.capacity:
+                    self._store.popitem(last=False)
+        return miss_now
+
+    @property
+    def miss_rate(self) -> float:
+        total = self.hits + self.misses
+        return self.misses / total if total else 0.0
+
+    def reset_stats(self) -> None:
+        self.hits = self.misses = 0
+
+
+@dataclass
+class CooperativeCacheArray:
+    """P per-PE LRU caches over *owned* ids (Fig. 5b setup).
+
+    Independent minibatching: every PE caches any vertex it touches, so
+    hot vertices occupy P cache slots globally.  Cooperative: vertices
+    are fetched only by their owner, so the global effective capacity is
+    P * capacity with zero duplication.
+    """
+
+    num_pes: int
+    capacity_per_pe: int
+    caches: list = field(default_factory=list)
+
+    def __post_init__(self):
+        if not self.caches:
+            self.caches = [LRUCache(self.capacity_per_pe) for _ in range(self.num_pes)]
+
+    def access(self, per_pe_ids: np.ndarray) -> int:
+        """per_pe_ids: (P, n) padded id batches; returns total misses."""
+        return sum(
+            self.caches[p].access_batch(per_pe_ids[p]) for p in range(self.num_pes)
+        )
+
+    @property
+    def miss_rate(self) -> float:
+        h = sum(c.hits for c in self.caches)
+        m = sum(c.misses for c in self.caches)
+        return m / (h + m) if (h + m) else 0.0
+
+    def reset_stats(self) -> None:
+        for c in self.caches:
+            c.reset_stats()

@@ -1,0 +1,50 @@
+"""Feature loading: the storage -> PE stage of Table 1.
+
+Independent: each PE gathers features for its own ``S^L`` — vertices
+shared between PEs are fetched multiple times (wasted β bandwidth,
+Fig. 7a).  Cooperative: each PE fetches only *owned* ``S_p^L`` (zero
+duplication) and the first forward-layer all-to-all redistributes them
+(Fig. 7b).
+
+``FeatureStore`` also counts fetched rows so benchmarks can report the
+paper's bandwidth-savings numbers without real storage hardware.
+"""
+from __future__ import annotations
+
+from dataclasses import dataclass
+
+import jax
+import jax.numpy as jnp
+import numpy as np
+
+from repro.core.graph import INVALID
+
+
+@dataclass
+class FeatureStore:
+    """Vertex-embedding storage with fetch accounting."""
+
+    features: jax.Array  # (V, d)
+
+    def gather(self, ids: jax.Array) -> jax.Array:
+        """Masked gather; INVALID rows come back as zeros."""
+        V = self.features.shape[0]
+        h = self.features[jnp.clip(ids, 0, V - 1)]
+        return jnp.where((ids != INVALID)[..., None], h, 0.0)
+
+    def count_fetched(self, ids) -> int:
+        """Rows actually transferred from storage (unique per PE batch)."""
+        ids = np.asarray(ids)
+        if ids.ndim == 1:
+            u = np.unique(ids)
+            return int((u != INVALID).sum())
+        return sum(self.count_fetched(row) for row in ids)
+
+    def count_duplicates_across_pes(self, per_pe_ids) -> int:
+        """Extra fetches Independent pays vs a perfectly-shared fetch."""
+        per_pe_ids = np.asarray(per_pe_ids)
+        per_pe_unique = self.count_fetched(per_pe_ids)
+        global_unique = int(
+            (np.unique(per_pe_ids.ravel()) != INVALID).sum()
+        )
+        return per_pe_unique - global_unique

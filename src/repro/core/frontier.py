@@ -1,0 +1,90 @@
+"""Padded, static-capacity vertex-set operations.
+
+JAX/TPU cannot lower dynamic-size frontiers, so every expansion set
+``S^l`` is a fixed-capacity int32 vector padded with ``INVALID`` and kept
+*sorted* (valid ids first, then padding — INVALID is int32 max so a plain
+sort yields this layout).  All set algebra (union, unique, membership)
+reduces to sorts and searchsorted, which lower to efficient TPU sort
+networks.
+"""
+from __future__ import annotations
+
+from functools import partial
+
+import jax
+import jax.numpy as jnp
+
+from repro.core.graph import INVALID
+
+
+def pad_to(ids: jax.Array, cap: int) -> jax.Array:
+    """Pad / truncate a 1-D id vector to capacity ``cap``."""
+    n = ids.shape[0]
+    if n >= cap:
+        return ids[:cap]
+    return jnp.concatenate([ids, jnp.full((cap - n,), INVALID, ids.dtype)])
+
+
+@partial(jax.jit, static_argnums=(1,))
+def unique_padded(ids: jax.Array, cap: int) -> jax.Array:
+    """Sorted unique ids with INVALID padding, capacity ``cap``.
+
+    Overflow policy: if the true unique count exceeds ``cap`` the smallest
+    ``cap`` ids are kept (deterministic; callers size capacities from
+    fanout budgets so this only triggers under adversarial inputs).
+    """
+    flat = ids.reshape(-1)
+    return jnp.unique(flat, size=cap, fill_value=INVALID)
+
+
+@partial(jax.jit, static_argnums=(2,))
+def union_padded(a: jax.Array, b: jax.Array, cap: int) -> jax.Array:
+    return unique_padded(jnp.concatenate([a.reshape(-1), b.reshape(-1)]), cap)
+
+
+@jax.jit
+def count_valid(ids: jax.Array) -> jax.Array:
+    return jnp.sum(ids != INVALID)
+
+
+@jax.jit
+def lookup(sorted_ids: jax.Array, queries: jax.Array) -> jax.Array:
+    """Index of each query in a sorted padded id vector; -1 if absent.
+
+    ``queries`` may contain INVALID (maps to -1).
+    """
+    pos = jnp.searchsorted(sorted_ids, queries).astype(jnp.int32)
+    pos = jnp.clip(pos, 0, sorted_ids.shape[0] - 1)
+    hit = (sorted_ids[pos] == queries) & (queries != INVALID)
+    return jnp.where(hit, pos, jnp.int32(-1))
+
+
+@jax.jit
+def contains(sorted_ids: jax.Array, queries: jax.Array) -> jax.Array:
+    return lookup(sorted_ids, queries) >= 0
+
+
+@partial(jax.jit, static_argnums=(2,))
+def compact(ids: jax.Array, keep: jax.Array, cap: int) -> jax.Array:
+    """Keep ``ids[keep]``, drop the rest; result sorted + INVALID-padded."""
+    masked = jnp.where(keep, ids, INVALID)
+    out = jnp.sort(masked.reshape(-1))
+    return pad_to(out, cap)
+
+
+@partial(jax.jit, static_argnums=(1,))
+def multiplicity(sorted_ids: jax.Array, cap: int) -> jax.Array:
+    """Occurrence count of each *valid* entry of a sorted padded vector.
+
+    Used by the theory harness to measure |T^l| (eq. 5): vertices reached
+    from exactly one seed.
+    """
+    ids = sorted_ids
+    left = jnp.concatenate([jnp.full((1,), -1, ids.dtype), ids[:-1]])
+    starts = (ids != left) & (ids != INVALID)
+    seg = jnp.cumsum(starts) - 1  # run index per element
+    seg = jnp.where(ids == INVALID, cap - 1, seg)
+    counts = jnp.zeros((cap,), jnp.int32).at[seg].add(
+        jnp.where(ids != INVALID, 1, 0)
+    )
+    return counts, starts

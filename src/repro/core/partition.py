@@ -1,0 +1,115 @@
+"""1-D graph partitioning for Cooperative Minibatching (§3.1).
+
+Each vertex (and its incoming edges) is logically owned by one PE.  The
+paper uses random partitioning by default (cross-edge ratio
+``c ≈ (P-1)/P``) and METIS for reduced communication.  METIS is not
+available offline, so we provide a greedy multi-source BFS grower as the
+quality-partitioner proxy — it delivers the same qualitative effect the
+paper reports (lower ``c`` => smaller all-to-all volume, Table 7).
+"""
+from __future__ import annotations
+
+from dataclasses import dataclass
+
+import jax
+import jax.numpy as jnp
+import numpy as np
+
+
+@dataclass(frozen=True)
+class Partition:
+    """Vertex -> PE ownership map."""
+
+    owner: jax.Array  # (V,) int32 in [0, P)
+    num_parts: int
+
+    def owner_of(self, ids: jax.Array) -> jax.Array:
+        from repro.core.graph import INVALID
+
+        safe = jnp.where(ids == INVALID, 0, ids)
+        own = self.owner[safe]
+        return jnp.where(ids == INVALID, self.num_parts - 1, own)
+
+    def local_rank(self, ids: jax.Array) -> jax.Array:
+        """Stable intra-part index (hash order); used for bucketed A2A."""
+        return ids % jnp.int32(max(1, self.num_parts))
+
+
+def hash_partition(num_vertices: int, num_parts: int) -> Partition:
+    """Random (hash) partitioning — the paper's default, c ~ (P-1)/P."""
+    v = np.arange(num_vertices, dtype=np.uint64)
+    h = (v * np.uint64(0x9E3779B97F4A7C15)) >> np.uint64(33)
+    owner = (h % np.uint64(num_parts)).astype(np.int32)
+    return Partition(owner=jnp.asarray(owner), num_parts=num_parts)
+
+
+def block_partition(num_vertices: int, num_parts: int) -> Partition:
+    """Contiguous blocks (locality-friendly for RMAT-ordered ids)."""
+    owner = np.minimum(
+        np.arange(num_vertices, dtype=np.int64) * num_parts // num_vertices,
+        num_parts - 1,
+    ).astype(np.int32)
+    return Partition(owner=jnp.asarray(owner), num_parts=num_parts)
+
+
+def greedy_bfs_partition(graph, num_parts: int, seed: int = 0) -> Partition:
+    """Greedy balanced multi-source BFS growing (METIS proxy, host-side).
+
+    Grows ``num_parts`` regions breadth-first from random seeds, always
+    extending the currently-smallest region; unreached vertices fall back
+    to hash assignment.  Cuts cross-edge ratio well below (P-1)/P on
+    graphs with locality.
+    """
+    indptr = np.asarray(graph.indptr)
+    indices = np.asarray(graph.indices)
+    V = graph.num_vertices
+    rng = np.random.default_rng(seed)
+    owner = np.full(V, -1, dtype=np.int32)
+    target = (V + num_parts - 1) // num_parts
+    frontiers: list[list[int]] = [[] for _ in range(num_parts)]
+    sizes = np.zeros(num_parts, dtype=np.int64)
+    for p, s in enumerate(rng.choice(V, size=num_parts, replace=False)):
+        owner[s] = p
+        frontiers[p].append(int(s))
+        sizes[p] = 1
+    active = set(range(num_parts))
+    while active:
+        p = min(active, key=lambda q: sizes[q])
+        if not frontiers[p] or sizes[p] >= target:
+            active.discard(p)
+            continue
+        nxt: list[int] = []
+        for v in frontiers[p]:
+            for t in indices[indptr[v] : indptr[v + 1]]:
+                if owner[t] == -1 and sizes[p] < target:
+                    owner[t] = p
+                    sizes[p] += 1
+                    nxt.append(int(t))
+        frontiers[p] = nxt
+        if not nxt:
+            active.discard(p)
+    unassigned = owner == -1
+    if unassigned.any():
+        fallback = np.asarray(hash_partition(V, num_parts).owner)
+        owner[unassigned] = fallback[unassigned]
+    return Partition(owner=jnp.asarray(owner), num_parts=num_parts)
+
+
+def cross_edge_ratio(graph, part: Partition) -> float:
+    """Fraction ``c`` of edges whose endpoints live on different PEs."""
+    indptr = np.asarray(graph.indptr)
+    indices = np.asarray(graph.indices)
+    owner = np.asarray(part.owner)
+    dst = np.repeat(np.arange(graph.num_vertices), np.diff(indptr))
+    cross = owner[indices] != owner[dst]
+    return float(cross.mean()) if len(cross) else 0.0
+
+
+def make_partition(kind: str, graph, num_parts: int, seed: int = 0) -> Partition:
+    if kind == "hash":
+        return hash_partition(graph.num_vertices, num_parts)
+    if kind == "block":
+        return block_partition(graph.num_vertices, num_parts)
+    if kind in ("bfs", "metis", "greedy"):
+        return greedy_bfs_partition(graph, num_parts, seed)
+    raise ValueError(f"unknown partition kind {kind!r}")

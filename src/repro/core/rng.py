@@ -1,0 +1,162 @@
+"""Stateless, counter-based randomness for samplers.
+
+The paper's dependent-minibatching smoothing (Appendix A.7) requires that
+the random variate attached to a vertex ``t`` (LABOR) or an edge
+``(t, s)`` (NS) is a *pure function of (seed z, t[, s])* — re-rolling with
+the same seed must reproduce the same variate.  We therefore derive all
+sampler randomness from an integer mixing function instead of stateful
+PRNG streams.
+
+Smoothed interpolation between two seeds ``z1 -> z2`` (A.7):
+
+    n_ts(c) = cos(c*pi/2) * n1_ts + sin(c*pi/2) * n2_ts,   c = i / kappa
+    r_ts    = Phi(n_ts(c))  ~  U(0, 1)   for every c
+
+so neighborhoods drift continuously and are fully refreshed every kappa
+iterations, while each step's marginal distribution stays exactly uniform
+(unbiased sampler at every step).
+"""
+from __future__ import annotations
+
+from dataclasses import dataclass
+
+import jax
+import jax.numpy as jnp
+from jax.scipy.stats import norm
+
+
+def _mix(x: jax.Array) -> jax.Array:
+    """splitmix64-style avalanche on uint32 (fixed-point, vectorized)."""
+    x = x.astype(jnp.uint32)
+    x = (x ^ (x >> 16)) * jnp.uint32(0x7FEB352D)
+    x = (x ^ (x >> 15)) * jnp.uint32(0x846CA68B)
+    x = x ^ (x >> 16)
+    return x
+
+
+def hash_u32(ids: jax.Array, seed, salt=0) -> jax.Array:
+    """Deterministic uint32 hash of integer ids under (seed, salt).
+
+    ``seed`` and ``salt`` may be python ints or (traced) integer arrays.
+    """
+    seed = jnp.asarray(seed).astype(jnp.uint32)
+    salt = jnp.asarray(salt).astype(jnp.uint32)
+    h = _mix(jnp.asarray(ids).astype(jnp.uint32) ^ (seed * jnp.uint32(0x9E3779B9)))
+    h = _mix(h ^ (salt * jnp.uint32(0x85EBCA6B)))
+    return h
+
+
+def hash_pair_u32(a: jax.Array, b: jax.Array, seed, salt: int = 0) -> jax.Array:
+    """Hash of an id pair (edge (t, s)); order-sensitive."""
+    ha = hash_u32(a, seed, salt)
+    return _mix(ha ^ _mix(b.astype(jnp.uint32) ^ jnp.uint32(0xDEADBEEF)))
+
+
+def uniform_from_u32(h: jax.Array) -> jax.Array:
+    """uint32 -> float32 in the open interval (0, 1)."""
+    return (h.astype(jnp.float32) + 0.5) * jnp.float32(1.0 / 4294967296.0)
+
+
+def uniform_from_ids(ids, seed, salt: int = 0) -> jax.Array:
+    return uniform_from_u32(hash_u32(ids, seed, salt))
+
+
+def normal_from_ids(ids, seed, salt: int = 0) -> jax.Array:
+    """Standard normal via inverse-CDF of the hashed uniform."""
+    return norm.ppf(uniform_from_ids(ids, seed, salt))
+
+
+def normal_from_pairs(a, b, seed, salt: int = 0) -> jax.Array:
+    return norm.ppf(uniform_from_u32(hash_pair_u32(a, b, seed, salt)))
+
+
+@dataclass(frozen=True)
+class RNGState:
+    """Dynamic smoothed-RNG state: two seeds + interpolation coefficient.
+
+    A pytree of scalars, so it threads through ``jax.jit`` as a *dynamic*
+    argument — one compiled train step serves every iteration of a
+    dependent-minibatching run (no per-step retrace).
+
+    ``c == 0`` reduces exactly to independent sampling since
+    ``Phi(Phi^{-1}(u)) == u``.
+    """
+
+    z1: jax.Array  # uint32 scalar
+    z2: jax.Array  # uint32 scalar
+    c: jax.Array   # float32 scalar in [0, 1)
+
+    def vertex_uniform(self, ids: jax.Array, salt: int = 0) -> jax.Array:
+        """r_t ~ U(0,1), smoothly drifting with step (LABOR variates)."""
+        n1 = normal_from_ids(ids, self.z1, salt)
+        n2 = normal_from_ids(ids, self.z2, salt)
+        n = jnp.cos(self.c * jnp.pi / 2) * n1 + jnp.sin(self.c * jnp.pi / 2) * n2
+        return norm.cdf(n)
+
+    def edge_uniform(self, t: jax.Array, s: jax.Array, salt: int = 0) -> jax.Array:
+        """r_ts ~ U(0,1) per edge (NS variates), smoothly drifting."""
+        n1 = normal_from_pairs(t, s, self.z1, salt)
+        n2 = normal_from_pairs(t, s, self.z2, salt)
+        n = jnp.cos(self.c * jnp.pi / 2) * n1 + jnp.sin(self.c * jnp.pi / 2) * n2
+        return norm.cdf(n)
+
+    def fold(self, salt: int) -> jax.Array:
+        """Derive a uint32 sub-seed (e.g. random-walk streams)."""
+        return (
+            self.z1 * jnp.uint32(0x9E3779B9) + jnp.uint32(salt) * jnp.uint32(0x85EBCA6B)
+        )
+
+
+jax.tree_util.register_pytree_node(
+    RNGState,
+    lambda s: ((s.z1, s.z2, s.c), None),
+    lambda _, ch: RNGState(*ch),
+)
+
+
+@dataclass(frozen=True)
+class DependentRNG:
+    """Seed schedule implementing smoothed dependent minibatching (A.7).
+
+    ``kappa`` is the dependency window; ``step`` the global iteration.
+    ``kappa = 1``   -> fully independent batches (fresh seed every step).
+    ``kappa = None``-> infinite dependency (static neighborhoods).
+
+    Seeds for window ``w = step // kappa`` are ``base + w`` (z1) and
+    ``base + w + 1`` (z2); the interpolation coefficient is
+    ``c = (step % kappa) / kappa``.  ``step`` may be a python int or a
+    traced array (``state_at``), so a single compiled train step covers
+    the whole schedule.
+    """
+
+    base_seed: int
+    kappa: int | None = 1
+    step: int = 0
+
+    def at_step(self, step: int) -> "DependentRNG":
+        return DependentRNG(self.base_seed, self.kappa, step)
+
+    def state_at(self, step) -> RNGState:
+        base = jnp.uint32(self.base_seed & 0xFFFFFFFF)
+        if self.kappa is None:  # infinite dependency
+            return RNGState(base, base, jnp.float32(0.0))
+        step = jnp.asarray(step, jnp.int32)
+        window = step // self.kappa
+        i = step % self.kappa
+        c = i.astype(jnp.float32) / self.kappa
+        z1 = base + window.astype(jnp.uint32)
+        return RNGState(z1, z1 + jnp.uint32(1), c)
+
+    @property
+    def state(self) -> RNGState:
+        return self.state_at(self.step)
+
+    # convenience passthroughs (host-side use in tests/benchmarks)
+    def vertex_uniform(self, ids: jax.Array, salt: int = 0) -> jax.Array:
+        return self.state.vertex_uniform(ids, salt)
+
+    def edge_uniform(self, t: jax.Array, s: jax.Array, salt: int = 0) -> jax.Array:
+        return self.state.edge_uniform(t, s, salt)
+
+    def fold(self, salt: int):
+        return self.state.fold(salt)

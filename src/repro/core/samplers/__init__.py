@@ -1,0 +1,15 @@
+from repro.core.samplers.base import LayerSample, Sampler, make_sampler
+from repro.core.samplers.neighbor import NeighborSampler
+from repro.core.samplers.labor import LaborSampler
+from repro.core.samplers.random_walk import RandomWalkSampler
+from repro.core.samplers.full import FullSampler
+
+__all__ = [
+    "LayerSample",
+    "Sampler",
+    "make_sampler",
+    "NeighborSampler",
+    "LaborSampler",
+    "RandomWalkSampler",
+    "FullSampler",
+]

@@ -1,0 +1,77 @@
+"""Sampler interface.
+
+A sampler maps a padded seed frontier ``S^l`` to the sampled in-edges of
+that layer: a static-shape table ``nbr[(n, row_width)]`` of source ids
+(INVALID padded) and its validity mask.  ``row_width`` is a *static*
+per-sampler constant (``k`` for NS, ``max_degree`` for LABOR/Full, ``k``
+for RW) so every hop lowers with fixed shapes.
+
+All samplers draw randomness exclusively through a
+:class:`repro.core.rng.DependentRNG`, which is what makes the paper's
+smoothed dependent minibatching (A.7) a *property of the RNG*, not of any
+individual sampling algorithm.
+"""
+from __future__ import annotations
+
+from dataclasses import dataclass
+from typing import Optional, Protocol
+
+import jax
+
+from repro.core.graph import Graph
+from repro.core.rng import DependentRNG
+
+
+@dataclass(frozen=True)
+class LayerSample:
+    """Sampled in-edges of one layer: dst row i is seeds[i]."""
+
+    seeds: jax.Array  # (n,) int32, INVALID padded, sorted
+    nbr: jax.Array    # (n, row_width) int32 source ids, INVALID padded
+    mask: jax.Array   # (n, row_width) bool
+    etypes: Optional[jax.Array] = None  # (n, row_width) int32 relation ids
+
+    @property
+    def num_edges(self):
+        import jax.numpy as jnp
+
+        return jnp.sum(self.mask)
+
+
+jax.tree_util.register_pytree_node(
+    LayerSample,
+    lambda s: ((s.seeds, s.nbr, s.mask, s.etypes), None),
+    lambda _, c: LayerSample(*c),
+)
+
+class Sampler(Protocol):
+    name: str
+
+    def row_width(self, graph: Graph) -> int:
+        ...
+
+    def sample_layer(
+        self, graph: Graph, seeds: jax.Array, rng: DependentRNG, layer: int
+    ) -> LayerSample:
+        ...
+
+
+def make_sampler(name: str, fanout: int = 10, **kw) -> "Sampler":
+    """Factory: 'ns' | 'labor0' | 'labor*' | 'rw' | 'full'."""
+    from repro.core.samplers.full import FullSampler
+    from repro.core.samplers.labor import LaborSampler
+    from repro.core.samplers.neighbor import NeighborSampler
+    from repro.core.samplers.random_walk import RandomWalkSampler
+
+    name = name.lower()
+    if name in ("ns", "neighbor"):
+        return NeighborSampler(fanout=fanout, **kw)
+    if name in ("labor0", "labor-0"):
+        return LaborSampler(fanout=fanout, importance=False, **kw)
+    if name in ("labor*", "labor-*", "labor_star"):
+        return LaborSampler(fanout=fanout, importance=True, **kw)
+    if name in ("rw", "randomwalk", "random_walk"):
+        return RandomWalkSampler(fanout=fanout, **kw)
+    if name == "full":
+        return FullSampler(**kw)
+    raise ValueError(f"unknown sampler {name!r}")

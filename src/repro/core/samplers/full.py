@@ -1,0 +1,27 @@
+"""Full-neighborhood "sampler" (no sampling; k >= max degree)."""
+from __future__ import annotations
+
+from dataclasses import dataclass
+
+import jax
+
+from repro.core.graph import Graph
+from repro.core.rng import DependentRNG
+from repro.core.samplers.base import LayerSample
+
+
+@dataclass(frozen=True)
+class FullSampler:
+    name: str = "full"
+
+    def row_width(self, graph: Graph) -> int:
+        return graph.max_degree
+
+    def sample_layer(
+        self, graph: Graph, seeds: jax.Array, rng: DependentRNG, layer: int
+    ) -> LayerSample:
+        nbr, mask = graph.neighbor_table(seeds)
+        etypes = (
+            graph.neighbor_edge_types(seeds) if graph.edge_types is not None else None
+        )
+        return LayerSample(seeds=seeds, nbr=nbr, mask=mask, etypes=etypes)

@@ -1,0 +1,55 @@
+"""Neighbor Sampling (GraphSAGE; Hamilton et al., 2017) — A.1.1.
+
+For seed ``s`` with degree ``d_s``: keep the whole neighborhood if
+``d_s <= k``; otherwise pick ``k`` uniform neighbors without replacement.
+
+Without-replacement selection is done with per-edge random *keys*
+``r_ts`` and a bottom-k over the row — equivalent in distribution to
+reservoir sampling, but (a) static-shape and (b) keyed off
+``DependentRNG.edge_uniform`` so smoothed dependent minibatching drops in
+for free (the paper smooths exactly these ``r_ts``, A.7).
+"""
+from __future__ import annotations
+
+from dataclasses import dataclass
+from functools import partial
+
+import jax
+import jax.numpy as jnp
+
+from repro.core.graph import Graph, INVALID
+from repro.core.rng import DependentRNG
+from repro.core.samplers.base import LayerSample
+
+
+@dataclass(frozen=True)
+class NeighborSampler:
+    fanout: int = 10
+    name: str = "ns"
+
+    def row_width(self, graph: Graph) -> int:
+        return min(self.fanout, graph.max_degree)
+
+    def sample_layer(
+        self, graph: Graph, seeds: jax.Array, rng: DependentRNG, layer: int
+    ) -> LayerSample:
+        nbr_full, mask_full = graph.neighbor_table(seeds)
+        seeds_b = jnp.broadcast_to(seeds[:, None], nbr_full.shape)
+        keys = rng.edge_uniform(nbr_full, seeds_b, salt=layer)
+        k = self.row_width(graph)
+        nbr, mask, idx = _bottom_k(nbr_full, mask_full, keys, k)
+        etypes = None
+        if graph.edge_types is not None:
+            et_full = graph.neighbor_edge_types(seeds)
+            etypes = jnp.take_along_axis(et_full, idx, axis=1)
+        return LayerSample(seeds=seeds, nbr=nbr, mask=mask, etypes=etypes)
+
+
+@partial(jax.jit, static_argnums=(3,))
+def _bottom_k(nbr, mask, keys, k):
+    keys = jnp.where(mask, keys, jnp.inf)
+    neg_top, idx = jax.lax.top_k(-keys, k)  # k smallest keys per row
+    sel_mask = jnp.isfinite(-neg_top)
+    sel = jnp.take_along_axis(nbr, idx, axis=1)
+    sel = jnp.where(sel_mask, sel, INVALID)
+    return sel, sel_mask, idx

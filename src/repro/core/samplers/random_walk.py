@@ -1,0 +1,105 @@
+"""RandomWalk sampling (PinSAGE; Ying et al., 2018) — A.1.3.
+
+``a`` walks of length ``o`` with restart probability ``p`` from every
+seed; the ``k`` most-visited vertices become the seed's sampled
+neighborhood.  Equivalent to weighted NS from A_tilde = sum_i A^i without
+materializing A_tilde.
+
+TPU adaptation: walks are a ``lax.scan`` over ``o`` steps carrying the
+(n, a) walker front; the visit histogram / top-k uses the static-size
+``jnp.unique`` + ``top_k`` combination per row.
+"""
+from __future__ import annotations
+
+from dataclasses import dataclass
+from functools import partial
+
+import jax
+import jax.numpy as jnp
+
+from repro.core.graph import Graph, INVALID
+from repro.core.rng import DependentRNG
+from repro.core.samplers.base import LayerSample
+
+
+@dataclass(frozen=True)
+class RandomWalkSampler:
+    fanout: int = 10
+    walk_length: int = 3
+    restart_prob: float = 0.5
+    num_walks: int = 16
+    name: str = "rw"
+
+    def row_width(self, graph: Graph) -> int:
+        return self.fanout
+
+    def sample_layer(
+        self, graph: Graph, seeds: jax.Array, rng: DependentRNG, layer: int
+    ) -> LayerSample:
+        z = rng.fold(salt=1000 + layer)
+        nbr, mask = _walk_topk(
+            graph.indptr,
+            graph.indices,
+            seeds,
+            z,
+            self.walk_length,
+            self.restart_prob,
+            self.num_walks,
+            self.fanout,
+            graph.num_edges,
+        )
+        return LayerSample(seeds=seeds, nbr=nbr, mask=mask)
+
+
+@partial(jax.jit, static_argnums=(4, 5, 6, 7, 8))
+def _walk_topk(indptr, indices, seeds, z, o, p, a, k, num_edges):
+    from repro.core.rng import hash_u32, uniform_from_u32
+
+    n = seeds.shape[0]
+    walk_ids = jnp.arange(n * a, dtype=jnp.int32).reshape(n, a)
+
+    def random_neighbor(cur, salt):
+        """One uniform in-neighbor of each walker; INVALID if none/invalid."""
+        safe = jnp.where(cur == INVALID, 0, cur)
+        offs = indptr[safe]
+        deg = indptr[safe + 1] - offs
+        u = uniform_from_u32(
+            hash_u32(walk_ids, z, salt) ^ hash_u32(cur, z + 7, salt)
+        )
+        pick = offs + jnp.minimum((u * deg).astype(jnp.int32), jnp.maximum(deg - 1, 0))
+        nxt = indices[jnp.clip(pick, 0, max(num_edges - 1, 0))]
+        return jnp.where((deg > 0) & (cur != INVALID), nxt, INVALID)
+
+    seeds_b = jnp.broadcast_to(seeds[:, None], (n, a))
+
+    def step(cur, salt):
+        restart = (
+            uniform_from_u32(hash_u32(walk_ids, z + 13, salt)) < p
+        )
+        base = jnp.where(restart, seeds_b, cur)
+        nxt = random_neighbor(base, salt)
+        # dead-end walkers restart from the seed next step
+        nxt = jnp.where(nxt == INVALID, seeds_b, nxt)
+        return nxt, nxt
+
+    first = random_neighbor(seeds_b, 0)
+    first = jnp.where(first == INVALID, seeds_b, first)
+    _, visits = jax.lax.scan(step, first, jnp.arange(1, o, dtype=jnp.int32))
+    visited = jnp.concatenate([first[None], visits], axis=0)  # (o, n, a)
+    visited = jnp.moveaxis(visited, 0, 1).reshape(n, o * a)
+    # never count the seed itself as its own neighbor
+    visited = jnp.where(visited == seeds[:, None], INVALID, visited)
+
+    def row_topk(row):
+        uniq, counts = jnp.unique(
+            row, size=o * a, fill_value=INVALID, return_counts=True
+        )
+        counts = jnp.where(uniq == INVALID, 0, counts)
+        top_counts, idx = jax.lax.top_k(counts, k)
+        sel = uniq[idx]
+        sel_mask = top_counts > 0
+        return jnp.where(sel_mask, sel, INVALID), sel_mask
+
+    nbr, mask = jax.vmap(row_topk)(visited)
+    valid_seed = (seeds != INVALID)[:, None]
+    return jnp.where(valid_seed, nbr, INVALID), mask & valid_seed

@@ -1,0 +1,4 @@
+from repro.data.synthetic import SyntheticGraphDataset, rmat_graph
+from repro.data.tokens import synthetic_token_batch
+
+__all__ = ["SyntheticGraphDataset", "rmat_graph", "synthetic_token_batch"]

@@ -1,0 +1,23 @@
+"""Pallas TPU kernels for the paper's compute hot-spots.
+
+The paper's per-minibatch runtime is dominated by (Table 1):
+
+* neighbor aggregation in the forward/backward pass  -> ``spmm``
+* vertex-embedding fetch from storage                -> ``gather`` (paged)
+* GAT edge softmax (§4.3 GAT experiment)             -> ``seg_softmax``
+
+Each kernel ships as ``kernel.py`` (pl.pallas_call + explicit BlockSpec
+VMEM tiling), ``ops.py`` (jit'd public wrapper with padding/dispatch) and
+``ref.py`` (pure-jnp oracle used by tests and by non-TPU backends).
+
+TPU adaptation (DESIGN.md §3): CUDA GNN kernels use warp-per-row
+gather-reduce; here rows are blocked to MXU/VPU-friendly tiles, the
+feature dimension is tiled in 128-lane slices, and the embedding-table
+gather is re-organised as a *paged* scan (grid over table pages resident
+in VMEM, accumulating hits) instead of random HBM access.
+"""
+from repro.kernels.spmm.ops import spmm_mean, spmm_sum
+from repro.kernels.gather.ops import paged_gather
+from repro.kernels.seg_softmax.ops import seg_softmax
+
+__all__ = ["spmm_mean", "spmm_sum", "paged_gather", "seg_softmax"]

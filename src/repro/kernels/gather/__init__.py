@@ -1,0 +1,3 @@
+from repro.kernels.gather.ops import paged_gather
+
+__all__ = ["paged_gather"]

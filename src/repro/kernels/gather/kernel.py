@@ -1,0 +1,70 @@
+"""Pallas TPU kernel: paged vertex-embedding gather (feature loading).
+
+The paper's feature-loading stage streams embedding rows from storage
+(Table 1, β-bandwidth bound).  Random row access into a huge HBM table
+is hostile to the TPU DMA engine, so the table is scanned in *pages*:
+
+    grid = (row blocks, feature blocks, table pages)
+
+Each step holds one ``(page, block_d)`` table tile in VMEM; requested
+rows that fall inside the current page are gathered from VMEM and
+accumulated into the output tile (revisited across the page axis, which
+Pallas keeps innermost so the output tile stays resident).  Cost is one
+sequential sweep of the table slice — optimal when the id batch is dense
+in the table (the cooperative case: ids are *owned*, hence clustered),
+and a documented trade-off vs random access when ids are sparse.
+"""
+from __future__ import annotations
+
+import functools
+
+import jax
+import jax.numpy as jnp
+from jax.experimental import pallas as pl
+
+
+def _gather_kernel(ids_ref, table_ref, out_ref, *, page: int):
+    p = pl.program_id(2)
+    ids = ids_ref[...]                      # (bn,)
+    tab = table_ref[...]                    # (page, bd)
+    local = ids - p * page
+    hit = (local >= 0) & (local < page)
+    rows = tab[jnp.clip(local, 0, page - 1)]
+    contrib = jnp.where(hit[:, None], rows, 0.0).astype(out_ref.dtype)
+
+    @pl.when(p == 0)
+    def _init():
+        out_ref[...] = contrib
+
+    @pl.when(p != 0)
+    def _acc():
+        out_ref[...] += contrib
+
+
+@functools.partial(
+    jax.jit, static_argnames=("block_n", "block_d", "page", "interpret")
+)
+def paged_gather_pallas(
+    table: jax.Array,  # (V, d), V % page == 0
+    ids: jax.Array,    # (n,) int32, n % block_n == 0
+    *,
+    block_n: int = 512,
+    block_d: int = 128,
+    page: int = 2048,
+    interpret: bool = False,
+) -> jax.Array:
+    V, d = table.shape
+    (n,) = ids.shape
+    assert V % page == 0 and d % block_d == 0 and n % block_n == 0
+    grid = (n // block_n, d // block_d, V // page)
+    return pl.pallas_call(
+        functools.partial(_gather_kernel, page=page),
+        grid=grid,
+        in_specs=[
+            pl.BlockSpec((block_n,), lambda i, j, p: (i,)),
+            pl.BlockSpec((page, block_d), lambda i, j, p: (p, j)),
+        ],
+        out_specs=pl.BlockSpec((block_n, block_d), lambda i, j, p: (i, j)),
+        out_shape=jax.ShapeDtypeStruct((n, d), table.dtype),
+        interpret=interpret,
+    )(ids, table)

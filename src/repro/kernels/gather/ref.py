@@ -1,0 +1,14 @@
+"""Pure-jnp oracle for the masked embedding gather (feature loading)."""
+from __future__ import annotations
+
+import jax.numpy as jnp
+
+_INVALID = jnp.int32(2**31 - 1)
+
+
+def gather_ref(table: jnp.ndarray, ids: jnp.ndarray) -> jnp.ndarray:
+    """out[i] = table[ids[i]]; padding ids (INVALID or any id >= V) -> 0."""
+    V = table.shape[0]
+    valid = (ids >= 0) & (ids < V)
+    rows = table[jnp.clip(ids, 0, V - 1)]
+    return jnp.where(valid[..., None], rows, 0.0)

@@ -1,0 +1,3 @@
+from repro.kernels.seg_softmax.ops import seg_softmax
+
+__all__ = ["seg_softmax"]

@@ -1,0 +1,51 @@
+"""Pallas TPU kernel: masked per-destination edge softmax (GAT, §4.3).
+
+Each destination row softmaxes over its (padded) sampled-neighbor slots.
+Tiling: grid over row blocks; one ``(block_n, w)`` logits tile + mask
+tile in VMEM, the reduction runs entirely in-registers on the VPU —
+replacing the CUDA segment-scan formulation with a dense masked-row one,
+which is the natural TPU shape for static-capacity frontiers.
+"""
+from __future__ import annotations
+
+import functools
+
+import jax
+import jax.numpy as jnp
+from jax.experimental import pallas as pl
+
+
+def _seg_softmax_kernel(e_ref, mask_ref, out_ref):
+    e = e_ref[...]         # (bn, w)
+    m = mask_ref[...]      # (bn, w)
+    neg = jnp.asarray(-1e9, e.dtype)
+    masked = jnp.where(m, e, neg)
+    mx = jnp.max(masked, axis=1, keepdims=True)
+    ex = jnp.exp(masked - mx)
+    ex = jnp.where(m, ex, 0.0)
+    denom = jnp.maximum(jnp.sum(ex, axis=1, keepdims=True), 1e-20)
+    out_ref[...] = (ex / denom).astype(out_ref.dtype)
+
+
+@functools.partial(jax.jit, static_argnames=("block_n", "interpret"))
+def seg_softmax_pallas(
+    e: jax.Array,     # (n, w)
+    mask: jax.Array,  # (n, w)
+    *,
+    block_n: int = 256,
+    interpret: bool = False,
+) -> jax.Array:
+    n, w = e.shape
+    assert n % block_n == 0
+    grid = (n // block_n,)
+    return pl.pallas_call(
+        _seg_softmax_kernel,
+        grid=grid,
+        in_specs=[
+            pl.BlockSpec((block_n, w), lambda i: (i, 0)),
+            pl.BlockSpec((block_n, w), lambda i: (i, 0)),
+        ],
+        out_specs=pl.BlockSpec((block_n, w), lambda i: (i, 0)),
+        out_shape=jax.ShapeDtypeStruct((n, w), e.dtype),
+        interpret=interpret,
+    )(e, mask)

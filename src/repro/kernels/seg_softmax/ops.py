@@ -1,0 +1,25 @@
+"""Public wrapper for the edge-softmax kernel (multi-head aware)."""
+from __future__ import annotations
+
+import jax
+import jax.numpy as jnp
+
+from repro.kernels.seg_softmax.kernel import seg_softmax_pallas
+from repro.kernels.seg_softmax.ref import seg_softmax_ref
+
+
+def seg_softmax(e: jax.Array, mask: jax.Array, *, block_n: int = 256) -> jax.Array:
+    """Masked softmax over neighbor slots; supports (n, w) and (n, w, h)."""
+    if jax.default_backend() != "tpu":
+        return seg_softmax_ref(e, mask)
+    if e.ndim == 3:  # fold heads into rows: (n, w, h) -> (n*h, w)
+        n, w, h = e.shape
+        e2 = jnp.moveaxis(e, 2, 1).reshape(n * h, w)
+        m2 = jnp.repeat(mask, h, axis=0)
+        out = seg_softmax(e2, m2, block_n=block_n)
+        return jnp.moveaxis(out.reshape(n, h, w), 1, 2)
+    n, w = e.shape
+    pad_n = (-n) % block_n
+    e_p = jnp.pad(e, ((0, pad_n), (0, 0)))
+    m_p = jnp.pad(mask, ((0, pad_n), (0, 0)), constant_values=False)
+    return seg_softmax_pallas(e_p, m_p, block_n=block_n)[:n]

@@ -1,0 +1,19 @@
+"""Pure-jnp oracle for masked per-destination edge softmax (GAT)."""
+from __future__ import annotations
+
+import jax.numpy as jnp
+
+
+def seg_softmax_ref(e: jnp.ndarray, mask: jnp.ndarray) -> jnp.ndarray:
+    """Softmax over axis 1 restricted to valid slots; invalid -> 0.
+
+    e: (n, w[, h]) attention logits; mask: (n, w).
+    """
+    m = mask[..., None] if e.ndim == 3 else mask
+    neg = jnp.asarray(-1e9, e.dtype)
+    masked = jnp.where(m, e, neg)
+    mx = jnp.max(masked, axis=1, keepdims=True)
+    ex = jnp.exp(masked - mx)
+    ex = jnp.where(m, ex, 0.0)
+    denom = jnp.maximum(jnp.sum(ex, axis=1, keepdims=True), 1e-20)
+    return ex / denom

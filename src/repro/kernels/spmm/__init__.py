@@ -1,0 +1,3 @@
+from repro.kernels.spmm.ops import spmm_mean, spmm_sum
+
+__all__ = ["spmm_mean", "spmm_sum"]

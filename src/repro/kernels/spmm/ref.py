@@ -1,0 +1,19 @@
+"""Pure-jnp oracle for padded-bipartite neighbor aggregation."""
+from __future__ import annotations
+
+import jax.numpy as jnp
+
+
+def spmm_ref(
+    src: jnp.ndarray,      # (S, d) source embeddings
+    nbr_idx: jnp.ndarray,  # (n, w) row indices into src, -1 = padding
+    mask: jnp.ndarray,     # (n, w)
+    mean: bool = True,
+) -> jnp.ndarray:
+    rows = src[jnp.clip(nbr_idx, 0)]
+    rows = jnp.where(mask[..., None], rows, 0.0)
+    s = jnp.sum(rows, axis=1)
+    if not mean:
+        return s
+    deg = jnp.maximum(jnp.sum(mask, axis=1, keepdims=True), 1)
+    return s / deg.astype(s.dtype)

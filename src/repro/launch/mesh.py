@@ -1,0 +1,34 @@
+"""Production mesh construction (TPU v5e pods).
+
+Defined as FUNCTIONS so importing this module never touches jax device
+state (the dry-run must set XLA_FLAGS before any jax initialization).
+"""
+from __future__ import annotations
+
+import jax
+
+
+def make_production_mesh(*, multi_pod: bool = False):
+    """16x16 single-pod (256 chips) or 2x16x16 two-pod (512 chips) mesh.
+
+    Axes: ``data`` carries the batch (and is the PE axis for the paper's
+    cooperative minibatching), ``model`` carries tensor parallelism,
+    ``pod`` is the outer data-parallel axis across ICI islands (the
+    paper's cooperation domain is one fast-interconnect island — see
+    DESIGN.md §6 and paper §A.11).
+    """
+    shape = (2, 16, 16) if multi_pod else (16, 16)
+    axes = ("pod", "data", "model") if multi_pod else ("data", "model")
+    return jax.make_mesh(shape, axes)
+
+
+def make_host_mesh(num_devices: int | None = None, axis: str = "data"):
+    """Small 1-D mesh over available devices (tests, single-host runs)."""
+    n = num_devices or len(jax.devices())
+    return jax.make_mesh((n,), (axis,))
+
+
+def batch_axes(mesh) -> tuple[str, ...]:
+    """Mesh axes that shard the batch dimension."""
+    names = mesh.axis_names
+    return tuple(a for a in ("pod", "data") if a in names)

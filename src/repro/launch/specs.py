@@ -1,0 +1,94 @@
+"""ShapeDtypeStruct input specs per (architecture x input shape).
+
+The assigned input-shape grid:
+
+    train_4k      seq  4,096  global_batch 256   train_step
+    prefill_32k   seq 32,768  global_batch  32   prefill_step
+    decode_32k    seq 32,768  global_batch 128   serve_step (1 token)
+    long_500k     seq 524,288 global_batch   1   serve_step (1 token)
+
+``long_500k`` is only generated for sub-quadratic-capable archs (SSM /
+hybrid / native sliding-window); pure full-attention archs skip it
+(DESIGN.md §5).  Audio/VLM frontends appear as precomputed embedding
+specs (the sanctioned stub).
+"""
+from __future__ import annotations
+
+from dataclasses import dataclass
+
+import jax
+import jax.numpy as jnp
+
+from repro.models.transformer import init_decode_state, init_lm
+from repro.models.transformer.config import ArchConfig
+from repro.train.optim import AdamState
+
+
+@dataclass(frozen=True)
+class ShapeSpec:
+    name: str
+    seq_len: int
+    global_batch: int
+    kind: str  # train | prefill | decode
+
+
+SHAPES = {
+    "train_4k": ShapeSpec("train_4k", 4_096, 256, "train"),
+    "prefill_32k": ShapeSpec("prefill_32k", 32_768, 32, "prefill"),
+    "decode_32k": ShapeSpec("decode_32k", 32_768, 128, "decode"),
+    "long_500k": ShapeSpec("long_500k", 524_288, 1, "decode"),
+}
+
+# archs that may run long_500k (sub-quadratic or native sliding-window)
+LONG_CONTEXT_OK = {"mamba2-2.7b", "hymba-1.5b", "gemma2-2b", "gemma3-27b"}
+
+
+def shape_applicable(cfg: ArchConfig, shape: str) -> tuple[bool, str]:
+    if shape == "long_500k" and cfg.name.replace("-smoke", "") not in LONG_CONTEXT_OK:
+        return False, "full-attention stack; long-context decode skipped (DESIGN.md §5)"
+    return True, ""
+
+
+def _sds(shape, dtype):
+    return jax.ShapeDtypeStruct(shape, dtype)
+
+
+def batch_specs(cfg: ArchConfig, spec: ShapeSpec) -> dict:
+    """Input ShapeDtypeStructs for the step named by ``spec.kind``."""
+    B, S = spec.global_batch, spec.seq_len
+    dt = cfg.jdtype
+    if spec.kind in ("train", "prefill"):
+        s_text = S - cfg.num_prefix_tokens
+        batch = {"tokens": _sds((B, s_text), jnp.int32)}
+        if spec.kind == "train":
+            batch["labels"] = _sds((B, s_text), jnp.int32)
+        if cfg.num_prefix_tokens:
+            batch["prefix_embeds"] = _sds((B, cfg.num_prefix_tokens, cfg.d_model), dt)
+        if cfg.enc_dec:
+            batch["enc_out"] = _sds((B, cfg.enc_len, cfg.d_model), dt)
+        return batch
+    # decode: one token + pre-sized caches
+    return {"token": _sds((B, 1), jnp.int32)}
+
+
+def params_specs(cfg: ArchConfig) -> dict:
+    """Parameter ShapeDtypeStructs via eval_shape (no allocation)."""
+    return jax.eval_shape(lambda: init_lm(jax.random.PRNGKey(0), cfg))
+
+
+def opt_specs(params_s) -> AdamState:
+    def mom(s):
+        dt = jnp.float32 if jnp.issubdtype(s.dtype, jnp.floating) else s.dtype
+        return jax.ShapeDtypeStruct(s.shape, dt)
+
+    return AdamState(
+        step=jax.ShapeDtypeStruct((), jnp.int32),
+        mu=jax.tree.map(mom, params_s),
+        nu=jax.tree.map(mom, params_s),
+    )
+
+
+def decode_state_specs(cfg: ArchConfig, spec: ShapeSpec) -> dict:
+    return jax.eval_shape(
+        lambda: init_decode_state(cfg, spec.global_batch, spec.seq_len)
+    )

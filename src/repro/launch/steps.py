@@ -1,0 +1,104 @@
+"""Step-function factories for the architecture pool.
+
+``make_train_step``   — next-token CE + MoE aux loss + Adam update.
+``make_prefill_step`` — inference forward over the full prompt.
+``make_serve_step``   — ONE new token against a KV/SSM cache.
+
+All are pure functions of (params, [opt_state | state], batch) suitable
+for ``jax.jit(...).lower(...)`` in the dry-run and for real training in
+the examples.
+"""
+from __future__ import annotations
+
+from typing import Callable
+
+import jax
+import jax.numpy as jnp
+
+from repro.models.transformer import (
+    forward_decode,
+    forward_prefill,
+)
+from repro.models.transformer.config import ArchConfig
+from repro.models.transformer.model import _unembed, forward_hidden
+from repro.train.optim import adam_update
+
+
+def _chunked_ce(cfg: ArchConfig, params, h: jax.Array, labels: jax.Array,
+                chunk: int = 512) -> jax.Array:
+    """Next-token CE computed in sequence chunks.
+
+    Materializing full (B, S, V) logits at the assigned shapes is
+    O(100 TB) global (train_4k × 49k-262k vocabs); chunking caps the
+    live logits tensor at (B, chunk, V) and lets XLA reuse the buffer
+    across chunks.  ``jax.checkpoint`` keeps the backward pass chunked
+    too (logits recomputed per chunk).
+    """
+    B, S, d = h.shape
+    c = min(chunk, S)
+    n = S // c
+    rem = S - n * c
+
+    @jax.checkpoint
+    def chunk_loss(h_c, y_c):
+        logits = _unembed(params, cfg, h_c).astype(jnp.float32)
+        logz = jax.nn.logsumexp(logits, axis=-1)
+        ll = jnp.take_along_axis(logits, y_c[..., None], axis=-1)[..., 0]
+        return jnp.sum(logz - ll)
+
+    hs = jnp.moveaxis(h[:, : n * c].reshape(B, n, c, d), 1, 0)
+    ys = jnp.moveaxis(labels[:, : n * c].reshape(B, n, c), 1, 0)
+
+    def body(acc, xs):
+        h_c, y_c = xs
+        return acc + chunk_loss(h_c, y_c), None
+
+    total, _ = jax.lax.scan(body, jnp.zeros((), jnp.float32), (hs, ys))
+    if rem:
+        total = total + chunk_loss(h[:, n * c :], labels[:, n * c :])
+    return total / (B * S)
+
+
+def lm_loss(cfg: ArchConfig, params, batch, ce_chunk: int = 512) -> jax.Array:
+    """Mean next-token CE over text positions (+ MoE load-balance aux)."""
+    h, aux = forward_hidden(
+        params,
+        cfg,
+        batch["tokens"],
+        batch.get("prefix_embeds"),
+        batch.get("enc_out"),
+    )
+    h = h[:, cfg.num_prefix_tokens :, :]
+    ce = _chunked_ce(cfg, params, h, batch["labels"], chunk=ce_chunk)
+    return ce + 0.01 * aux
+
+
+def make_train_step(cfg: ArchConfig, lr: float = 1e-3) -> Callable:
+    def train_step(params, opt_state, batch):
+        loss, grads = jax.value_and_grad(lambda p: lm_loss(cfg, p, batch))(params)
+        params, opt_state = adam_update(params, grads, opt_state, lr=lr)
+        return params, opt_state, {"loss": loss}
+
+    return train_step
+
+
+def make_prefill_step(cfg: ArchConfig) -> Callable:
+    def prefill_step(params, batch):
+        logits, _ = forward_prefill(
+            params,
+            cfg,
+            batch["tokens"],
+            batch.get("prefix_embeds"),
+            batch.get("enc_out"),
+        )
+        return logits  # (B, V) last-position logits
+
+    return prefill_step
+
+
+def make_serve_step(cfg: ArchConfig) -> Callable:
+    def serve_step(params, state, token):
+        logits, state = forward_decode(params, cfg, state, token)
+        return logits, state
+
+    return serve_step

@@ -1,0 +1,8 @@
+from repro.models.gnn.layers import (
+    GNNConfig,
+    init_gnn,
+    gnn_apply,
+    gnn_apply_cooperative,
+)
+
+__all__ = ["GNNConfig", "init_gnn", "gnn_apply", "gnn_apply_cooperative"]

@@ -1,0 +1,17 @@
+from repro.models.transformer.config import ArchConfig
+from repro.models.transformer.model import (
+    init_lm,
+    forward_train,
+    forward_prefill,
+    forward_decode,
+    init_decode_state,
+)
+
+__all__ = [
+    "ArchConfig",
+    "init_lm",
+    "forward_train",
+    "forward_prefill",
+    "forward_decode",
+    "init_decode_state",
+]

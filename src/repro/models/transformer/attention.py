@@ -1,0 +1,233 @@
+"""Grouped-query attention: training (full-sequence) and decode (KV cache).
+
+Conventions:
+  x:       (B, S, d_model)
+  q/k/v:   (B, S, H|KV, head_dim)
+  cache:   dict(k=(B, S_max, KV, hd), v=...), one per attention layer
+All masking is static-shape; decode masks by position index against the
+current length, so one compiled ``serve_step`` serves every position.
+"""
+from __future__ import annotations
+
+from typing import Optional
+
+import jax
+import jax.numpy as jnp
+import numpy as np
+
+from repro.models.transformer.config import ArchConfig
+from repro.models.transformer.modules import apply_rope, causal_mask, rope_freqs, softcap
+
+
+def init_attention(key, cfg: ArchConfig, cross: bool = False) -> dict:
+    d, H, KV, hd = cfg.d_model, cfg.num_heads, cfg.num_kv_heads, cfg.hd
+    ks = jax.random.split(key, 4)
+    s = float(1.0 / np.sqrt(d))
+    so = float(1.0 / np.sqrt(H * hd))
+    dt = cfg.jdtype
+    return {
+        "wq": jax.random.normal(ks[0], (d, H * hd), dt) * s,
+        "wk": jax.random.normal(ks[1], (d, KV * hd), dt) * s,
+        "wv": jax.random.normal(ks[2], (d, KV * hd), dt) * s,
+        "wo": jax.random.normal(ks[3], (H * hd, d), dt) * so,
+    }
+
+
+def _split_heads(x, n, hd):
+    return x.reshape(*x.shape[:-1], n, hd)
+
+
+def _repeat_kv(k: jax.Array, groups: int) -> jax.Array:
+    """(B, S, KV, hd) -> (B, S, KV*groups, hd)."""
+    if groups == 1:
+        return k
+    return jnp.repeat(k, groups, axis=2)
+
+
+def _flash_attention(
+    q: jax.Array,   # (B, S, H, hd) roped
+    k: jax.Array,   # (B, S, H, hd) roped+repeated
+    v: jax.Array,
+    window: Optional[int],
+    attn_softcap: Optional[float],
+    block_k: int = 1024,
+) -> jax.Array:
+    """Online-softmax attention scanned over key blocks.
+
+    Never materializes (S, S) scores — peak intermediate is
+    (B, S, H, block_k), which keeps 32k-prefill inside HBM.  Causal /
+    sliding-window masking applied per block.
+    """
+    B, S, H, hd = q.shape
+    blk = min(block_k, S)
+    assert S % blk == 0
+    nb = S // blk
+    scale = 1.0 / np.sqrt(hd)
+    q_pos = jnp.arange(S)
+    kb = jnp.moveaxis(k.reshape(B, nb, blk, H, hd), 1, 0)  # (nb,B,blk,H,hd)
+    vb = jnp.moveaxis(v.reshape(B, nb, blk, H, hd), 1, 0)
+
+    def step(carry, inp):
+        acc, m, l = carry
+        j, k_j, v_j = inp
+        s = jnp.einsum("bqhd,bkhd->bqhk", q, k_j) * scale  # (B,S,H,blk)
+        if attn_softcap:
+            s = softcap(s, attn_softcap)
+        k_pos = j * blk + jnp.arange(blk)
+        ok = k_pos[None, :] <= q_pos[:, None]
+        if window is not None:
+            ok &= k_pos[None, :] > (q_pos[:, None] - window)
+        s = jnp.where(ok[None, :, None, :], s, -1e9)
+        m_new = jnp.maximum(m, jnp.max(s, axis=-1))
+        p = jnp.exp(s - m_new[..., None])
+        corr = jnp.exp(m - m_new)
+        l_new = l * corr + jnp.sum(p, axis=-1)
+        acc_new = acc * corr[..., None] + jnp.einsum("bqhk,bkhd->bqhd", p, v_j)
+        return (acc_new, m_new, l_new), None
+
+    acc0 = jnp.zeros((B, S, H, hd), jnp.float32)
+    m0 = jnp.full((B, S, H), -jnp.inf, jnp.float32)
+    l0 = jnp.zeros((B, S, H), jnp.float32)
+    (acc, m, l), _ = jax.lax.scan(
+        step,
+        (acc0, m0, l0),
+        (jnp.arange(nb), kb.astype(jnp.float32), vb.astype(jnp.float32)),
+    )
+    return (acc / jnp.maximum(l, 1e-20)[..., None]).astype(q.dtype)
+
+
+def _banded_local_attention(
+    q: jax.Array,  # (B, S, H, hd)
+    k: jax.Array,
+    v: jax.Array,
+    window: int,
+    attn_softcap: Optional[float],
+) -> jax.Array:
+    """Exact sliding-window attention in O(S·2W).
+
+    Queries are blocked by window; block i attends key blocks {i-1, i}
+    with an in-band causal/window mask — the standard TPU-friendly
+    banded layout (no gather, all dense tiles).
+    """
+    B, S, H, hd = q.shape
+    W = window
+    assert S % W == 0, (S, W)
+    nw = S // W
+    scale = 1.0 / np.sqrt(hd)
+    qb = q.reshape(B, nw, W, H, hd)
+    kb = k.reshape(B, nw, W, H, hd)
+    vb = v.reshape(B, nw, W, H, hd)
+    # previous key/value block (zeros for the first)
+    k_prev = jnp.concatenate([jnp.zeros_like(kb[:, :1]), kb[:, :-1]], axis=1)
+    v_prev = jnp.concatenate([jnp.zeros_like(vb[:, :1]), vb[:, :-1]], axis=1)
+    k2 = jnp.concatenate([k_prev, kb], axis=2)  # (B,nw,2W,H,hd)
+    v2 = jnp.concatenate([v_prev, vb], axis=2)
+    s = jnp.einsum("bnqhd,bnkhd->bnqhk", qb, k2) * scale  # (B,nw,W,H,2W)
+    if attn_softcap:
+        s = softcap(s, attn_softcap)
+    q_pos = jnp.arange(W)[:, None]          # within-block query offset
+    k_pos = jnp.arange(2 * W)[None, :] - W  # key offset relative to block
+    ok = (k_pos <= q_pos) & (k_pos > q_pos - W)
+    first_block = jnp.arange(nw) == 0       # no previous block to see
+    ok_first = ok & (k_pos >= 0)
+    mask = jnp.where(first_block[:, None, None], ok_first[None], ok[None])
+    s = jnp.where(mask[None, :, :, None, :], s, -1e9)
+    w = jax.nn.softmax(s.astype(jnp.float32), axis=-1).astype(q.dtype)
+    out = jnp.einsum("bnqhk,bnkhd->bnqhd", w, v2)
+    return out.reshape(B, S, H, hd)
+
+
+def attention_train(
+    p: dict,
+    cfg: ArchConfig,
+    x: jax.Array,                 # (B, S, d)
+    positions: jax.Array,         # (S,) shared across batch rows
+    window: Optional[int],        # None = global
+) -> jax.Array:
+    H, KV, hd = cfg.num_heads, cfg.num_kv_heads, cfg.hd
+    B, S, _ = x.shape
+    q = _split_heads(x @ p["wq"], H, hd)
+    k = _split_heads(x @ p["wk"], KV, hd)
+    v = _split_heads(x @ p["wv"], KV, hd)
+    sin, cos = rope_freqs(positions[None, :], hd, cfg.rope_theta)
+    q = apply_rope(q, sin, cos)
+    k = apply_rope(k, sin, cos)
+    k = _repeat_kv(k, H // KV)
+    v = _repeat_kv(v, H // KV)
+    if window is not None and S > 2 * window and S % window == 0:
+        out = _banded_local_attention(q, k, v, window, cfg.attn_softcap)
+    else:
+        out = _flash_attention(q, k, v, window, cfg.attn_softcap)
+    return out.reshape(B, S, H * hd) @ p["wo"]
+
+
+def attention_decode(
+    p: dict,
+    cfg: ArchConfig,
+    x: jax.Array,            # (B, 1, d)
+    cache: dict,             # {'k': (B, S_c, KV, hd), 'v': ...}
+    pos: jax.Array,          # () current position (same for whole batch)
+    window: Optional[int],
+    ring: bool = False,
+) -> tuple[jax.Array, dict]:
+    """One-token attention against a KV cache.
+
+    ``ring=True`` treats the cache as a rotating window buffer of length
+    ``S_c == window``: slot ``pos % S_c`` is overwritten, slot ``i`` holds
+    the key of absolute position ``pos - ((pos - i) mod S_c)`` (always
+    within the window by construction) — O(window) memory for local
+    layers even at 500k context.
+    """
+    H, KV, hd = cfg.num_heads, cfg.num_kv_heads, cfg.hd
+    S = cache["k"].shape[1]
+    q = _split_heads(x @ p["wq"], H, hd)          # (B,1,H,hd)
+    k_new = _split_heads(x @ p["wk"], KV, hd)
+    v_new = _split_heads(x @ p["wv"], KV, hd)
+    posb = jnp.broadcast_to(pos, x.shape[:1] + (1,))
+    sin, cos = rope_freqs(posb, hd, cfg.rope_theta)
+    q = apply_rope(q, sin, cos)
+    k_new = apply_rope(k_new, sin, cos)
+    slot = pos % S if ring else pos
+    k = jax.lax.dynamic_update_slice(
+        cache["k"], k_new.astype(cache["k"].dtype), (0, slot, 0, 0)
+    )
+    v = jax.lax.dynamic_update_slice(
+        cache["v"], v_new.astype(cache["v"].dtype), (0, slot, 0, 0)
+    )
+    new_cache = {"k": k, "v": v}
+    kr = _repeat_kv(k, H // KV)
+    vr = _repeat_kv(v, H // KV)
+    scores = jnp.einsum("bqhd,bkhd->bhqk", q, kr) / np.sqrt(hd)  # (B,H,1,S)
+    if cfg.attn_softcap:
+        scores = softcap(scores, cfg.attn_softcap)
+    idx = jnp.arange(S)
+    if ring:
+        k_pos = pos - ((pos - idx) % S)   # absolute position held by slot
+        valid = k_pos >= 0
+    else:
+        valid = idx <= pos
+        if window is not None:
+            valid &= idx > pos - window
+    scores = jnp.where(
+        valid[None, None, None, :], scores, jnp.asarray(-1e9, scores.dtype)
+    )
+    w = jax.nn.softmax(scores.astype(jnp.float32), axis=-1).astype(x.dtype)
+    out = jnp.einsum("bhqk,bkhd->bqhd", w, vr)
+    return out.reshape(*x.shape[:-1], H * hd) @ p["wo"], new_cache
+
+
+def cross_attention(
+    p: dict,
+    cfg: ArchConfig,
+    x: jax.Array,        # (B, S_dec, d)
+    enc_out: jax.Array,  # (B, S_enc, d)
+) -> jax.Array:
+    """Whisper-style encoder-decoder cross attention (no mask, no RoPE)."""
+    H, KV, hd = cfg.num_heads, cfg.num_kv_heads, cfg.hd
+    q = _split_heads(x @ p["wq"], H, hd)
+    k = _repeat_kv(_split_heads(enc_out @ p["wk"], KV, hd), H // KV)
+    v = _repeat_kv(_split_heads(enc_out @ p["wv"], KV, hd), H // KV)
+    scores = jnp.einsum("bqhd,bkhd->bhqk", q, k) / np.sqrt(hd)
+    w = jax.nn.softmax(scores.astype(jnp.float32), axis=-1).astype(x.dtype)
+    out = jnp.einsum("bhqk,bkhd->bqhd", w, v)
+    return out.reshape(*x.shape[:-1], H * hd) @ p["wo"]

@@ -1,0 +1,354 @@
+"""Generic decoder LM covering the assigned architecture pool.
+
+Block kinds (``cfg.layer_pattern``):
+  global        full causal GQA attention
+  local         sliding-window GQA attention (window = cfg.window)
+  ssm           Mamba-2 SSD mixer (attention-free)
+  hybrid        parallel attention (windowed) + SSD heads, mean-fused (hymba)
+  hybrid_global hybrid with full attention (hymba's few global layers)
+
+MLP: dense (SwiGLU / GeGLU / squared-ReLU) or MoE (grok-1, llama4-scout).
+Frontends (audio/vision) are stubs per the brief: callers pass
+precomputed frame/patch embeddings; whisper additionally cross-attends
+to a stub-encoded audio context (enc-dec).
+"""
+from __future__ import annotations
+
+from typing import Optional
+
+import jax
+import jax.numpy as jnp
+import numpy as np
+
+from repro.models.transformer.attention import (
+    attention_decode,
+    attention_train,
+    cross_attention,
+    init_attention,
+)
+from repro.models.transformer.config import ArchConfig
+from repro.models.transformer.moe import init_moe, moe_apply
+from repro.models.transformer.modules import (
+    init_mlp,
+    mlp_apply,
+    rms_norm,
+    shard_hint,
+    softcap,
+)
+from repro.models.transformer.ssm import (
+    init_ssm,
+    init_ssm_state,
+    ssm_decode,
+    ssm_train,
+)
+
+# --------------------------------------------------------------------------
+# init
+# --------------------------------------------------------------------------
+def _num_units(cfg: ArchConfig) -> tuple[int, int]:
+    """Layers are grouped into scan units of one pattern period each.
+
+    Returns (n_units, tail): ``n_units`` full periods are executed with
+    ``lax.scan`` (sequential buffer reuse — the production layout, also
+    ~P_len× smaller HLO); ``tail`` leftover layers run unrolled.
+    """
+    p = len(cfg.layer_pattern)
+    return cfg.num_layers // p, cfg.num_layers % p
+
+
+def _init_layer(key, cfg: ArchConfig, kind: str) -> dict:
+    d = cfg.d_model
+    k1, k2, k3, k4 = jax.random.split(key, 4)
+    lp: dict = {"norm1": jnp.zeros((d,), cfg.jdtype)}
+    if kind in ("global", "local", "hybrid", "hybrid_global"):
+        lp["attn"] = init_attention(k1, cfg)
+    if kind in ("ssm", "hybrid", "hybrid_global"):
+        lp["ssm"] = init_ssm(k2, cfg)
+        if kind != "ssm":
+            lp["norm_ssm"] = jnp.zeros((d,), cfg.jdtype)
+    if cfg.enc_dec:
+        lp["cross"] = init_attention(k3, cfg, cross=True)
+        lp["norm_cross"] = jnp.zeros((d,), cfg.jdtype)
+    if cfg.d_ff:
+        lp["norm2"] = jnp.zeros((d,), cfg.jdtype)
+        if cfg.num_experts:
+            lp["moe"] = init_moe(k4, cfg)
+        else:
+            lp["mlp"] = init_mlp(k4, d, cfg.d_ff, cfg.gated_mlp, cfg.jdtype)
+    return lp
+
+
+def init_lm(key: jax.Array, cfg: ArchConfig) -> dict:
+    """Parameter pytree.
+
+    ``blocks[s]`` holds the parameters of pattern-slot ``s`` stacked over
+    the ``n_units`` scan iterations (leading axis U); ``tail`` holds the
+    unrolled leftover layers (pattern periods that do not divide L).
+    """
+    d, V = cfg.d_model, cfg.vocab_size
+    key, ke = jax.random.split(key)
+    params: dict = {
+        "embed": jax.random.normal(ke, (V, d), cfg.jdtype) * 0.02,
+        "final_norm": jnp.zeros((d,), cfg.jdtype),
+    }
+    if not cfg.tie_embeddings:
+        key, ku = jax.random.split(key)
+        params["unembed"] = jax.random.normal(ku, (d, V), cfg.jdtype) * 0.02
+    n_units, tail = _num_units(cfg)
+    p_len = len(cfg.layer_pattern)
+    blocks = []
+    for s in range(p_len):
+        kind = cfg.layer_pattern[s]
+        per_unit = []
+        for u in range(n_units):
+            key, kl = jax.random.split(key)
+            per_unit.append(_init_layer(kl, cfg, kind))
+        if per_unit:
+            blocks.append(jax.tree.map(lambda *xs: jnp.stack(xs), *per_unit))
+    params["blocks"] = blocks
+    tail_layers = []
+    for t in range(tail):
+        key, kl = jax.random.split(key)
+        tail_layers.append(_init_layer(kl, cfg, cfg.layer_pattern[t]))
+    params["tail"] = tail_layers
+    return params
+
+
+def layer_params(params: dict, cfg: ArchConfig, l: int) -> dict:
+    """Per-layer view of the stacked layout (decode path, tests)."""
+    n_units, _ = _num_units(cfg)
+    p_len = len(cfg.layer_pattern)
+    if l < n_units * p_len:
+        u, s = divmod(l, p_len)
+        return jax.tree.map(lambda x: x[u], params["blocks"][s])
+    return params["tail"][l - n_units * p_len]
+
+
+def _attn_window(cfg: ArchConfig, kind: str) -> Optional[int]:
+    return cfg.window if kind in ("local", "hybrid") else None
+
+
+def _unembed(params: dict, cfg: ArchConfig, h: jax.Array) -> jax.Array:
+    w = params["embed"].T if cfg.tie_embeddings else params["unembed"]
+    logits = h @ w
+    if cfg.logit_softcap:
+        logits = softcap(logits, cfg.logit_softcap)
+    return logits
+
+
+# --------------------------------------------------------------------------
+# training / prefill forward (full sequence)
+# --------------------------------------------------------------------------
+def forward_hidden(
+    params: dict,
+    cfg: ArchConfig,
+    tokens: jax.Array,                      # (B, S_text)
+    prefix_embeds: Optional[jax.Array] = None,  # (B, n_prefix, d) vlm/audio
+    enc_out: Optional[jax.Array] = None,        # (B, enc_len, d) whisper
+) -> tuple[jax.Array, jax.Array]:
+    """Returns (final-norm hidden states (B, S_total, d), moe_aux scalar).
+
+    Kept separate from the unembedding so training can compute the loss
+    in sequence chunks — materializing full (B, S, V) logits at the
+    assigned batch shapes would be O(100 TB) (see steps.lm_loss).
+    """
+    if cfg.cooperative_embed and tokens.size > cfg.vocab_size:
+        # Cooperative embedding gather (DESIGN.md §4) — the paper's
+        # deduplicated feature loading applied to the vocab table: the
+        # global batch requests each *unique* token id once from the
+        # vocab-sharded table (static bound: V rows ≪ B·S token slots),
+        # then expands locally.  Backward dedups the scatter-add the
+        # same way (AD of unique+gather).
+        flat = tokens.reshape(-1)
+        # pad with the max id so the padded vector stays sorted (the
+        # searchsorted below requires it)
+        uniq = jnp.unique(
+            flat, size=cfg.vocab_size, fill_value=cfg.vocab_size - 1
+        )
+        rows = params["embed"][uniq]
+        idx = jnp.searchsorted(uniq, flat)
+        h = rows[idx].reshape(*tokens.shape, -1)
+    else:
+        h = params["embed"][tokens]
+    if prefix_embeds is not None:
+        h = jnp.concatenate([prefix_embeds.astype(h.dtype), h], axis=1)
+    B, S, _ = h.shape
+    positions = jnp.arange(S)
+
+    def block(lp, h, kind):
+        # keep the residual stream batch-sharded through every reshape;
+        # optionally also sequence-sharded over the model axis (Megatron
+        # sequence parallelism — §Perf)
+        h = shard_hint(h, "batch", "seq" if cfg.seq_shard else None, None)
+        a2 = jnp.zeros((), jnp.float32)
+        if kind == "ssm":
+            h = h + ssm_train(lp["ssm"], cfg, rms_norm(h, lp["norm1"], cfg.norm_eps))
+        elif kind in ("hybrid", "hybrid_global"):
+            a = attention_train(
+                lp["attn"], cfg, rms_norm(h, lp["norm1"], cfg.norm_eps),
+                positions, _attn_window(cfg, kind),
+            )
+            s = ssm_train(lp["ssm"], cfg, rms_norm(h, lp["norm_ssm"], cfg.norm_eps))
+            h = h + 0.5 * (a + s)
+        else:
+            h = h + attention_train(
+                lp["attn"], cfg, rms_norm(h, lp["norm1"], cfg.norm_eps),
+                positions, _attn_window(cfg, kind),
+            )
+        if cfg.enc_dec and enc_out is not None:
+            h = h + cross_attention(
+                lp["cross"], cfg, rms_norm(h, lp["norm_cross"], cfg.norm_eps), enc_out
+            )
+        if cfg.d_ff:
+            x2 = rms_norm(h, lp["norm2"], cfg.norm_eps)
+            if cfg.num_experts:
+                y, a2 = moe_apply(lp["moe"], cfg, x2)
+                h = h + y
+            else:
+                h = h + mlp_apply(lp["mlp"], x2, cfg.activation, cfg.gated_mlp)
+        return h, a2
+
+    n_units, tail = _num_units(cfg)
+    pattern = cfg.layer_pattern
+
+    def unit_body(carry, unit_params):
+        h, aux = carry
+        for s, lp in enumerate(unit_params):
+            h, a2 = block(lp, h, pattern[s])
+            aux = aux + a2
+        return (h, aux), None
+
+    carry = (h, jnp.zeros((), jnp.float32))
+    if n_units:
+        body = jax.checkpoint(unit_body) if cfg.remat else unit_body
+        carry, _ = jax.lax.scan(body, carry, params["blocks"])
+    h, aux = carry
+    for t, lp in enumerate(params["tail"]):
+        fn = jax.checkpoint(block, static_argnums=(2,)) if cfg.remat else block
+        h, a2 = fn(lp, h, pattern[t])
+        aux = aux + a2
+    h = rms_norm(h, params["final_norm"], cfg.norm_eps)
+    return h, aux / max(cfg.num_layers, 1)
+
+
+def forward_train(
+    params: dict,
+    cfg: ArchConfig,
+    tokens: jax.Array,
+    prefix_embeds: Optional[jax.Array] = None,
+    enc_out: Optional[jax.Array] = None,
+) -> tuple[jax.Array, jax.Array]:
+    """Full logits (B, S_total, V) — small-scale/eval use only."""
+    h, aux = forward_hidden(params, cfg, tokens, prefix_embeds, enc_out)
+    return _unembed(params, cfg, h), aux
+
+
+# --------------------------------------------------------------------------
+# decode state
+# --------------------------------------------------------------------------
+def init_decode_state(cfg: ArchConfig, batch: int, max_len: int) -> dict:
+    """Zero KV/SSM caches for a ``max_len`` decode session."""
+    layers = []
+    KV, hd = cfg.num_kv_heads, cfg.hd
+    for l in range(cfg.num_layers):
+        kind = cfg.layer_kind(l)
+        st: dict = {}
+        if kind in ("global", "hybrid_global"):
+            st["kv"] = {
+                "k": jnp.zeros((batch, max_len, KV, hd), cfg.jdtype),
+                "v": jnp.zeros((batch, max_len, KV, hd), cfg.jdtype),
+            }
+        elif kind in ("local", "hybrid"):
+            W = min(cfg.window, max_len)
+            st["kv"] = {
+                "k": jnp.zeros((batch, W, KV, hd), cfg.jdtype),
+                "v": jnp.zeros((batch, W, KV, hd), cfg.jdtype),
+            }
+        if kind in ("ssm", "hybrid", "hybrid_global"):
+            st["ssm"] = init_ssm_state(cfg, batch)
+        layers.append(st)
+    state = {"pos": jnp.zeros((), jnp.int32), "layers": layers}
+    if cfg.enc_dec:
+        state["enc_out"] = jnp.zeros((batch, cfg.enc_len, cfg.d_model), cfg.jdtype)
+    return state
+
+
+def _is_ring(cfg: ArchConfig, kind: str, cache_len: int) -> bool:
+    return kind in ("local", "hybrid") and cache_len <= cfg.window
+
+
+# --------------------------------------------------------------------------
+# decode forward (one token)
+# --------------------------------------------------------------------------
+def forward_decode(
+    params: dict, cfg: ArchConfig, state: dict, token: jax.Array  # (B, 1)
+) -> tuple[jax.Array, dict]:
+    """One-token step with KV/SSM caches: returns (logits (B, V), state)."""
+    h = params["embed"][token]  # (B, 1, d)
+    pos = state["pos"]
+    new_layers = []
+    for l in range(cfg.num_layers):
+        lp = layer_params(params, cfg, l)
+        kind = cfg.layer_kind(l)
+        st = dict(state["layers"][l])
+        if kind == "ssm":
+            y, st["ssm"] = ssm_decode(
+                lp["ssm"], cfg, rms_norm(h, lp["norm1"], cfg.norm_eps), st["ssm"]
+            )
+            h = h + y
+        elif kind in ("hybrid", "hybrid_global"):
+            ring = _is_ring(cfg, kind, st["kv"]["k"].shape[1])
+            a, st["kv"] = attention_decode(
+                lp["attn"], cfg, rms_norm(h, lp["norm1"], cfg.norm_eps),
+                st["kv"], pos, _attn_window(cfg, kind), ring=ring,
+            )
+            s, st["ssm"] = ssm_decode(
+                lp["ssm"], cfg, rms_norm(h, lp["norm_ssm"], cfg.norm_eps), st["ssm"]
+            )
+            h = h + 0.5 * (a + s)
+        else:
+            ring = _is_ring(cfg, kind, st["kv"]["k"].shape[1])
+            a, st["kv"] = attention_decode(
+                lp["attn"], cfg, rms_norm(h, lp["norm1"], cfg.norm_eps),
+                st["kv"], pos, _attn_window(cfg, kind), ring=ring,
+            )
+            h = h + a
+        if cfg.enc_dec:
+            h = h + cross_attention(
+                lp["cross"], cfg, rms_norm(h, lp["norm_cross"], cfg.norm_eps),
+                state["enc_out"],
+            )
+        if cfg.d_ff:
+            x2 = rms_norm(h, lp["norm2"], cfg.norm_eps)
+            if cfg.num_experts:
+                y, _ = moe_apply(lp["moe"], cfg, x2)
+                h = h + y
+            else:
+                h = h + mlp_apply(lp["mlp"], x2, cfg.activation, cfg.gated_mlp)
+        new_layers.append(st)
+    h = rms_norm(h, params["final_norm"], cfg.norm_eps)
+    logits = _unembed(params, cfg, h)[:, 0, :]  # (B, V)
+    new_state = dict(state)
+    new_state["layers"] = new_layers
+    new_state["pos"] = pos + 1
+    return logits, new_state
+
+
+# --------------------------------------------------------------------------
+# prefill: full-sequence forward that also fills the decode caches
+# --------------------------------------------------------------------------
+def forward_prefill(
+    params: dict,
+    cfg: ArchConfig,
+    tokens: jax.Array,
+    prefix_embeds: Optional[jax.Array] = None,
+    enc_out: Optional[jax.Array] = None,
+) -> tuple[jax.Array, jax.Array]:
+    """Prefill forward; returns (last-position logits (B, V), moe aux).
+
+    Production serving would also emit the KV caches; for the dry-run we
+    lower the compute-dominant path (full forward) — decode shapes lower
+    ``forward_decode`` against a pre-sized cache instead.
+    """
+    logits, aux = forward_train(params, cfg, tokens, prefix_embeds, enc_out)
+    return logits[:, -1, :], aux

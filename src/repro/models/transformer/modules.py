@@ -1,0 +1,124 @@
+"""Shared transformer building blocks (pure JAX, pjit-friendly)."""
+from __future__ import annotations
+
+import jax
+import jax.numpy as jnp
+import numpy as np
+
+# --------------------------------------------------------------------------
+# logical sharding hints
+#
+# Model code never imports mesh objects; the launcher registers one and
+# the model sprinkles ``shard_hint(x, "batch", None, ...)`` constraints so
+# GSPMD keeps the batch dim sharded through reshapes (MoE groups, scan
+# residuals) where propagation otherwise gives up.  With no registered
+# mesh (unit tests, single-host runs) hints are no-ops.
+# --------------------------------------------------------------------------
+_LOGICAL_MESH = None
+
+
+def set_logical_mesh(mesh) -> None:
+    """Register (or clear, with None) the mesh used by ``shard_hint``."""
+    global _LOGICAL_MESH
+    _LOGICAL_MESH = mesh
+
+
+def shard_hint(x: jax.Array, *logical: str | None) -> jax.Array:
+    """Constrain ``x`` to (batch|model|None, ...) over the registered mesh."""
+    mesh = _LOGICAL_MESH
+    if mesh is None:
+        return x
+    from jax.sharding import NamedSharding, PartitionSpec
+
+    names = mesh.axis_names
+    batch = tuple(a for a in ("pod", "data") if a in names)
+    spec = []
+    for dim, ax in zip(x.shape, logical):
+        if ax == "batch" and batch:
+            size = 1
+            for a in batch:
+                size *= mesh.shape[a]
+            spec.append(batch if dim % size == 0 and dim > 1 else None)
+        elif ax == "expert" and "data" in names:
+            # expert-parallel activations: the expert dim of dispatched
+            # token blocks lives on the data axis; the transition from
+            # group-sharded tokens to expert-sharded blocks is then a
+            # true EP all-to-all instead of a GSPMD replication.
+            spec.append("data" if dim % mesh.shape["data"] == 0 else None)
+        elif ax in ("model", "seq") and "model" in names:
+            # "seq": Megatron-style sequence parallelism — the residual
+            # stream's sequence dim shards over the model axis between
+            # blocks (GSPMD inserts AG before attention / RS after),
+            # shrinking saved activations model_size-fold.
+            spec.append("model" if dim % mesh.shape["model"] == 0 else None)
+        else:
+            spec.append(None)
+    return jax.lax.with_sharding_constraint(
+        x, NamedSharding(mesh, PartitionSpec(*spec))
+    )
+
+
+def rms_norm(x: jax.Array, scale: jax.Array, eps: float = 1e-6) -> jax.Array:
+    var = jnp.mean(jnp.square(x.astype(jnp.float32)), axis=-1, keepdims=True)
+    y = x.astype(jnp.float32) * jax.lax.rsqrt(var + eps)
+    return (y * (1.0 + scale.astype(jnp.float32))).astype(x.dtype)
+
+
+def softcap(x: jax.Array, cap: float) -> jax.Array:
+    return (cap * jnp.tanh(x / cap)).astype(x.dtype)
+
+
+def rope_freqs(positions: jax.Array, head_dim: int, theta: float) -> tuple:
+    """positions (...,) -> (sin, cos) of shape (..., head_dim/2)."""
+    half = head_dim // 2
+    inv = 1.0 / (theta ** (np.arange(0, half) * 2.0 / head_dim))
+    ang = positions[..., None].astype(jnp.float32) * inv
+    return jnp.sin(ang), jnp.cos(ang)
+
+
+def apply_rope(x: jax.Array, sin: jax.Array, cos: jax.Array) -> jax.Array:
+    """x (..., n_heads, head_dim); sin/cos broadcastable (..., head_dim/2)."""
+    half = x.shape[-1] // 2
+    x1, x2 = x[..., :half], x[..., half:]
+    sin = sin[..., None, :]  # add head axis
+    cos = cos[..., None, :]
+    return jnp.concatenate(
+        [x1 * cos - x2 * sin, x2 * cos + x1 * sin], axis=-1
+    ).astype(x.dtype)
+
+
+_ACTS = {
+    "silu": jax.nn.silu,
+    "gelu": jax.nn.gelu,
+    "relu2": lambda x: jnp.square(jax.nn.relu(x)),  # nemotron squared-ReLU
+}
+
+
+def mlp_apply(p: dict, x: jax.Array, activation: str, gated: bool) -> jax.Array:
+    act = _ACTS[activation]
+    if gated:
+        h = act(x @ p["w_gate"]) * (x @ p["w_up"])
+    else:
+        h = act(x @ p["w_up"])
+    return h @ p["w_down"]
+
+
+def init_mlp(key, d_model: int, d_ff: int, gated: bool, dtype) -> dict:
+    k1, k2, k3 = jax.random.split(key, 3)
+    s_in = float(1.0 / np.sqrt(d_model))
+    s_out = float(1.0 / np.sqrt(d_ff))
+    p = {
+        "w_up": jax.random.normal(k1, (d_model, d_ff), dtype) * s_in,
+        "w_down": jax.random.normal(k2, (d_ff, d_model), dtype) * s_out,
+    }
+    if gated:
+        p["w_gate"] = jax.random.normal(k3, (d_model, d_ff), dtype) * s_in
+    return p
+
+
+def causal_mask(q_pos: jax.Array, k_pos: jax.Array, window: int | None) -> jax.Array:
+    """(..., Q, K) boolean mask: causal, optionally sliding-window."""
+    m = k_pos[..., None, :] <= q_pos[..., :, None]
+    if window is not None:
+        m &= k_pos[..., None, :] > (q_pos[..., :, None] - window)
+    return m

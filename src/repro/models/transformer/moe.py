@@ -1,0 +1,125 @@
+"""Mixture-of-Experts MLP with sort-based capacity dispatch.
+
+Tokens are routed top-k, grouped per expert by a stable sort (the same
+owner-bucketing pattern as ``cooperative._bucketize`` — the paper's
+communication structure reused for expert dispatch, DESIGN.md §4),
+processed as dense (E, C, d) batched matmuls (MXU-friendly), and
+combined back with router weights.  Over-capacity tokens are dropped
+(standard capacity-factor semantics).
+"""
+from __future__ import annotations
+
+import jax
+import jax.numpy as jnp
+import numpy as np
+
+from repro.models.transformer.config import ArchConfig
+from repro.models.transformer.modules import _ACTS
+
+
+def init_moe(key, cfg: ArchConfig) -> dict:
+    E, d, f = cfg.num_experts, cfg.d_model, cfg.d_ff
+    ks = jax.random.split(key, 4)
+    dt = cfg.jdtype
+    s_in, s_out = float(1.0 / np.sqrt(d)), float(1.0 / np.sqrt(f))
+    p = {
+        "router": jax.random.normal(ks[0], (d, E), dt) * s_in,
+        "w_up": jax.random.normal(ks[1], (E, d, f), dt) * s_in,
+        "w_down": jax.random.normal(ks[2], (E, f, d), dt) * s_out,
+    }
+    if cfg.gated_mlp:
+        p["w_gate"] = jax.random.normal(ks[3], (E, d, f), dt) * s_in
+    return p
+
+
+def moe_apply(p: dict, cfg: ArchConfig, x: jax.Array) -> tuple[jax.Array, jax.Array]:
+    """x (B, S, d) -> (out (B, S, d), aux load-balance loss scalar).
+
+    Routing/dispatch runs per *group* (``cfg.moe_groups``, aligned with
+    the data shards at launch time): the argsort/capacity logic then
+    never crosses shard boundaries, so GSPMD keeps dispatch local and
+    only the expert matmuls touch the model axis.
+    """
+    from repro.models.transformer.modules import shard_hint
+
+    B, S, d = x.shape
+    G = cfg.moe_groups if B % max(cfg.moe_groups, 1) == 0 else 1
+    if G > 1:
+        xg = shard_hint(x.reshape(G, (B // G) * S, d), "batch", None, None)
+        out, aux = jax.vmap(
+            lambda xx: _moe_group(p, cfg, xx), out_axes=(0, 0)
+        )(xg)
+        out = shard_hint(out, "batch", None, None)
+        return out.reshape(B, S, d), jnp.mean(aux)
+    out, aux = _moe_group(p, cfg, x.reshape(B * S, d))
+    return out.reshape(B, S, d), aux
+
+
+def _moe_group(p: dict, cfg: ArchConfig, xf: jax.Array) -> tuple[jax.Array, jax.Array]:
+    """(T, d) -> ((T, d), aux)."""
+    T, d = xf.shape
+    E, k = cfg.num_experts, cfg.moe_top_k
+    logits = (xf @ p["router"]).astype(jnp.float32)      # (T, E)
+    probs = jax.nn.softmax(logits, axis=-1)
+    gate, expert = jax.lax.top_k(probs, k)               # (T, k)
+    gate = gate / jnp.maximum(gate.sum(-1, keepdims=True), 1e-9)
+
+    # load-balance auxiliary loss (Switch-style)
+    density = jnp.mean(
+        jax.nn.one_hot(expert[:, 0], E, dtype=jnp.float32), axis=0
+    )
+    density_prob = jnp.mean(probs, axis=0)
+    aux = E * jnp.sum(density * density_prob)
+
+    C = int(np.ceil(T * k / E * cfg.moe_capacity_factor))
+    C = max(8, -(-C // 8) * 8)
+
+    # flatten (token, slot) assignments and group by expert via stable sort
+    flat_expert = expert.reshape(-1)                     # (T*k,)
+    flat_token = jnp.repeat(jnp.arange(T), k)
+    flat_gate = gate.reshape(-1)
+    order = jnp.argsort(flat_expert, stable=True)
+    sorted_e = flat_expert[order]
+    group_start = jnp.searchsorted(sorted_e, jnp.arange(E + 1))
+    rank = jnp.arange(T * k) - group_start[jnp.clip(sorted_e, 0, E)]
+    ok = rank < C
+    slot = jnp.where(ok, sorted_e * C + rank, E * C)     # park overflow
+
+    table_tok = (
+        jnp.full((E * C + 1,), -1, jnp.int32)
+        .at[slot]
+        .set(jnp.where(ok, flat_token[order].astype(jnp.int32), -1))[: E * C]
+        .reshape(E, C)
+    )
+    table_gate = (
+        jnp.zeros((E * C + 1,), jnp.float32)
+        .at[slot]
+        .set(jnp.where(ok, flat_gate[order], 0.0))[: E * C]
+        .reshape(E, C)
+    )
+
+    from repro.models.transformer.modules import shard_hint
+
+    valid = table_tok >= 0
+    xg = xf[jnp.clip(table_tok, 0)]                      # (E, C, d)
+    xg = jnp.where(valid[..., None], xg, 0.0)
+    # EP hint: expert blocks shard over data (a no-op if E % data != 0);
+    # the group->expert reshard then lowers to an all-to-all.
+    xg = shard_hint(xg, "expert", None, None)
+    act = _ACTS[cfg.activation]
+    if cfg.gated_mlp:
+        h = act(jnp.einsum("ecd,edf->ecf", xg, p["w_gate"])) * jnp.einsum(
+            "ecd,edf->ecf", xg, p["w_up"]
+        )
+    else:
+        h = act(jnp.einsum("ecd,edf->ecf", xg, p["w_up"]))
+    yg = jnp.einsum("ecf,efd->ecd", h, p["w_down"])      # (E, C, d)
+    yg = shard_hint(yg, "expert", None, None)
+    yg = yg * table_gate[..., None].astype(yg.dtype)
+
+    out = (
+        jnp.zeros((T + 1, d), yg.dtype)
+        .at[jnp.where(valid, table_tok, T).reshape(-1)]
+        .add(yg.reshape(-1, d))[:T]
+    )
+    return out.astype(xf.dtype), aux

@@ -1,0 +1,162 @@
+"""Mamba-2 SSD (state-space duality) sequence mixer [arXiv:2405.21060].
+
+Chunked matmul formulation: within-chunk terms are dense (MXU-friendly)
+masked matmuls; cross-chunk recurrence is a ``lax.scan`` carrying the
+(B, H, P, N) state.  Single B/C group shared across heads (Mamba-2
+default ngroups=1).
+
+Decode is the O(1) recurrent step:  h <- exp(dt·A) h + (dt·x) ⊗ B;
+y = C·h + D·x, with a rolling causal-conv state.
+"""
+from __future__ import annotations
+
+import jax
+import jax.numpy as jnp
+import numpy as np
+
+from repro.models.transformer.config import ArchConfig
+
+
+def init_ssm(key, cfg: ArchConfig) -> dict:
+    d, di, N, H = cfg.d_model, cfg.d_inner, cfg.ssm_state, cfg.n_ssm_heads
+    P = di // H
+    assert H * P == di, (di, H)
+    ks = jax.random.split(key, 5)
+    dt = cfg.jdtype
+    s = float(1.0 / np.sqrt(d))
+    conv_dim = di + 2 * N
+    return {
+        # fused input projection: [z (di) | x (di) | B (N) | C (N) | dt (H)]
+        "w_in": jax.random.normal(ks[0], (d, 2 * di + 2 * N + H), dt) * s,
+        "conv_w": jax.random.normal(ks[1], (cfg.ssm_conv, conv_dim), dt) * 0.1,
+        "A_log": jnp.log(
+            jax.random.uniform(ks[2], (H,), jnp.float32, 1.0, 16.0)
+        ),
+        "D": jnp.ones((H,), jnp.float32),
+        "dt_bias": jnp.zeros((H,), jnp.float32),
+        "w_out": jax.random.normal(ks[3], (di, d), dt) * float(1.0 / np.sqrt(di)),
+    }
+
+
+def _split_in(p, cfg: ArchConfig, u: jax.Array):
+    di, N, H = cfg.d_inner, cfg.ssm_state, cfg.n_ssm_heads
+    zxbcdt = u @ p["w_in"]
+    z = zxbcdt[..., :di]
+    xbc = zxbcdt[..., di : 2 * di + 2 * N]
+    dt_raw = zxbcdt[..., 2 * di + 2 * N :]
+    return z, xbc, dt_raw
+
+
+def _causal_conv(xbc: jax.Array, w: jax.Array) -> jax.Array:
+    """(B, S, C) depthwise causal conv, kernel (K, C)."""
+    K = w.shape[0]
+    pad = jnp.pad(xbc, ((0, 0), (K - 1, 0), (0, 0)))
+    out = sum(pad[:, i : i + xbc.shape[1], :] * w[i] for i in range(K))
+    return jax.nn.silu(out)
+
+
+def ssm_train(p: dict, cfg: ArchConfig, u: jax.Array) -> jax.Array:
+    """(B, S, d_model) -> (B, S, d_model); chunked SSD scan."""
+    B, S, _ = u.shape
+    di, N, H = cfg.d_inner, cfg.ssm_state, cfg.n_ssm_heads
+    P = di // H
+    Q = min(cfg.ssm_chunk, S)
+    assert S % Q == 0, (S, Q)
+    nc = S // Q
+
+    z, xbc, dt_raw = _split_in(p, cfg, u)
+    xbc = _causal_conv(xbc, p["conv_w"])
+    x = xbc[..., :di].reshape(B, S, H, P)
+    Bm = xbc[..., di : di + N]                     # (B,S,N)
+    Cm = xbc[..., di + N :]                        # (B,S,N)
+    dt = jax.nn.softplus(dt_raw.astype(jnp.float32) + p["dt_bias"])  # (B,S,H)
+    A = -jnp.exp(p["A_log"])                        # (H,) negative
+
+    la = dt * A                                     # (B,S,H) log decay
+    xb = x.astype(jnp.float32) * dt[..., None]      # dt-scaled input
+
+    # chunk views
+    la_c = la.reshape(B, nc, Q, H)
+    cum = jnp.cumsum(la_c, axis=2)                  # (B,nc,Q,H)
+    xb_c = xb.reshape(B, nc, Q, H, P)
+    B_c = Bm.reshape(B, nc, Q, N).astype(jnp.float32)
+    C_c = Cm.reshape(B, nc, Q, N).astype(jnp.float32)
+
+    # ---- intra-chunk (dense masked matmuls) ----
+    G = jnp.einsum("bcin,bcjn->bcij", C_c, B_c)     # (B,nc,Q,Q)
+    # clamp the exponent at 0: exact on the causal (i >= j) region, and
+    # prevents exp-overflow -> NaN gradients through the masked i < j
+    # entries (la <= 0 so cum is nonincreasing within a chunk)
+    diff = cum[:, :, :, None, :] - cum[:, :, None, :, :]  # (B,nc,Q,Q,H)
+    decay = jnp.exp(jnp.minimum(diff, 0.0))
+    mask = jnp.tril(jnp.ones((Q, Q), bool))
+    M = G[..., None] * jnp.where(mask[None, None, :, :, None], decay, 0.0)
+    y_intra = jnp.einsum("bcijh,bcjhp->bcihp", M, xb_c)
+
+    # ---- chunk summaries + cross-chunk recurrence ----
+    decay_to_end = jnp.exp(cum[:, :, -1:, :] - cum)             # (B,nc,Q,H)
+    S_c = jnp.einsum("bcjh,bcjn,bcjhp->bchpn", decay_to_end, B_c, xb_c)
+    chunk_decay = jnp.exp(cum[:, :, -1, :])                     # (B,nc,H)
+    in_decay = jnp.exp(cum)                                     # decay start->i
+
+    def chunk_step(h, inp):
+        S_cc, cd, Ci, indec = inp
+        # contribution of the carried state to every position in the chunk
+        y_int = jnp.einsum("bin,bhpn,bih->bihp", Ci, h, indec)
+        h_new = cd[:, :, None, None] * h + S_cc
+        return h_new, y_int
+
+    h0 = jnp.zeros((B, H, P, N), jnp.float32)
+    scan_in = (
+        jnp.moveaxis(S_c, 1, 0),           # (nc,B,H,P,N)
+        jnp.moveaxis(chunk_decay, 1, 0),   # (nc,B,H)
+        jnp.moveaxis(C_c, 1, 0),           # (nc,B,Q,N)
+        jnp.moveaxis(in_decay, 1, 0),      # (nc,B,Q,H)
+    )
+    _, y_inter = jax.lax.scan(chunk_step, h0, scan_in)
+    y_inter = jnp.moveaxis(y_inter, 0, 1)  # (B,nc,Q,H,P)
+
+    y = (y_intra + y_inter).reshape(B, S, H, P)
+    y = y + p["D"][None, None, :, None] * x.astype(jnp.float32)
+    y = y.reshape(B, S, di).astype(u.dtype)
+    return (y * jax.nn.silu(z)) @ p["w_out"]
+
+
+def init_ssm_state(cfg: ArchConfig, batch: int) -> dict:
+    di, N, H = cfg.d_inner, cfg.ssm_state, cfg.n_ssm_heads
+    P = di // H
+    conv_dim = di + 2 * N
+    return {
+        "h": jnp.zeros((batch, H, P, N), jnp.float32),
+        "conv": jnp.zeros((batch, cfg.ssm_conv - 1, conv_dim), cfg.jdtype),
+    }
+
+
+def ssm_decode(p: dict, cfg: ArchConfig, u: jax.Array, state: dict):
+    """One-token step: u (B, 1, d) -> (y (B, 1, d), new state)."""
+    B = u.shape[0]
+    di, N, H = cfg.d_inner, cfg.ssm_state, cfg.n_ssm_heads
+    P = di // H
+    z, xbc, dt_raw = _split_in(p, cfg, u)
+    z, xbc, dt_raw = z[:, 0], xbc[:, 0], dt_raw[:, 0]
+
+    # rolling causal conv
+    hist = jnp.concatenate([state["conv"], xbc[:, None, :]], axis=1)  # (B,K,C)
+    conv_out = jnp.einsum("bkc,kc->bc", hist, p["conv_w"])
+    xbc = jax.nn.silu(conv_out)
+    new_conv = hist[:, 1:, :]
+
+    x = xbc[..., :di].reshape(B, H, P).astype(jnp.float32)
+    Bm = xbc[..., di : di + N].astype(jnp.float32)
+    Cm = xbc[..., di + N :].astype(jnp.float32)
+    dt = jax.nn.softplus(dt_raw.astype(jnp.float32) + p["dt_bias"])  # (B,H)
+    A = -jnp.exp(p["A_log"])
+    decay = jnp.exp(dt * A)                                          # (B,H)
+    xdt = x * dt[..., None]                                          # (B,H,P)
+    h = state["h"] * decay[:, :, None, None] + jnp.einsum(
+        "bhp,bn->bhpn", xdt, Bm
+    )
+    y = jnp.einsum("bn,bhpn->bhp", Cm, h) + p["D"][None, :, None] * x
+    y = y.reshape(B, 1, di).astype(u.dtype)
+    out = (y * jax.nn.silu(z[:, None, :])) @ p["w_out"]
+    return out, {"h": h, "conv": new_conv}

@@ -1,0 +1,14 @@
+from repro.train.optim import adam_init, adam_update, sgd_update, cosine_lr
+from repro.train.loop import TrainConfig, train_gnn
+from repro.train.checkpoint import save_checkpoint, load_checkpoint
+
+__all__ = [
+    "adam_init",
+    "adam_update",
+    "sgd_update",
+    "cosine_lr",
+    "TrainConfig",
+    "train_gnn",
+    "save_checkpoint",
+    "load_checkpoint",
+]

@@ -1,0 +1,41 @@
+"""Flat-npz pytree checkpointing (orbax is unavailable offline)."""
+from __future__ import annotations
+
+import json
+import os
+from typing import Any
+
+import jax
+import numpy as np
+
+
+def _flatten_with_paths(tree) -> dict[str, np.ndarray]:
+    flat = {}
+    for path, leaf in jax.tree_util.tree_flatten_with_path(tree)[0]:
+        key = "/".join(str(getattr(p, "key", getattr(p, "idx", p))) for p in path)
+        flat[key] = np.asarray(leaf)
+    return flat
+
+
+def save_checkpoint(path: str, params, extra: dict[str, Any] | None = None) -> None:
+    os.makedirs(os.path.dirname(path) or ".", exist_ok=True)
+    flat = _flatten_with_paths(params)
+    np.savez(path if path.endswith(".npz") else path + ".npz", **flat)
+    meta = {"keys": sorted(flat), "extra": extra or {}}
+    with open(os.path.splitext(path)[0] + ".json", "w") as f:
+        json.dump(meta, f, indent=2, default=str)
+
+
+def load_checkpoint(path: str, like) -> Any:
+    """Restore into the structure of ``like`` (same flattening order)."""
+    data = np.load(path if path.endswith(".npz") else path + ".npz")
+    flat_like = _flatten_with_paths(like)
+    assert sorted(data.files) == sorted(flat_like), "checkpoint structure mismatch"
+    leaves_paths, treedef = jax.tree_util.tree_flatten_with_path(like)
+    new_leaves = []
+    for path_keys, leaf in leaves_paths:
+        key = "/".join(
+            str(getattr(p, "key", getattr(p, "idx", p))) for p in path_keys
+        )
+        new_leaves.append(np.asarray(data[key]).astype(np.asarray(leaf).dtype))
+    return jax.tree_util.tree_unflatten(treedef, new_leaves)

@@ -1,0 +1,33 @@
+"""Classification metrics (paper reports F1-scores, Table 3 / Fig 4)."""
+from __future__ import annotations
+
+import jax.numpy as jnp
+import numpy as np
+
+
+def masked_softmax_xent(logits, labels, valid):
+    """Mean CE over valid rows; logits (n, C), labels (n,), valid (n,)."""
+    logz = jnp.log(jnp.sum(jnp.exp(logits - logits.max(-1, keepdims=True)), -1))
+    ll = jnp.take_along_axis(
+        logits - logits.max(-1, keepdims=True), labels[:, None], axis=-1
+    )[:, 0]
+    ce = logz - ll
+    n = jnp.maximum(jnp.sum(valid), 1)
+    return jnp.sum(jnp.where(valid, ce, 0.0)) / n
+
+
+def micro_f1(preds: np.ndarray, labels: np.ndarray) -> float:
+    """Micro-F1 == accuracy for single-label multiclass."""
+    preds, labels = np.asarray(preds), np.asarray(labels)
+    return float((preds == labels).mean()) if len(preds) else 0.0
+
+
+def macro_f1(preds: np.ndarray, labels: np.ndarray, num_classes: int) -> float:
+    f1s = []
+    for c in range(num_classes):
+        tp = ((preds == c) & (labels == c)).sum()
+        fp = ((preds == c) & (labels != c)).sum()
+        fn = ((preds != c) & (labels == c)).sum()
+        denom = 2 * tp + fp + fn
+        f1s.append(2 * tp / denom if denom else 0.0)
+    return float(np.mean(f1s))

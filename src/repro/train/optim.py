@@ -1,0 +1,80 @@
+"""Hand-rolled optimizers (optax is unavailable offline).
+
+Adam (Kingma & Ba, 2014) with the paper's default lr=1e-3, plus SGD and a
+cosine schedule for the LM pool.  States are plain pytrees so they shard
+with pjit like any other array.
+"""
+from __future__ import annotations
+
+from typing import NamedTuple
+
+import jax
+import jax.numpy as jnp
+
+
+class AdamState(NamedTuple):
+    step: jax.Array
+    mu: dict
+    nu: dict
+
+
+def _moment_like(p):
+    """f32 moments even for bf16 params (standard mixed-precision Adam)."""
+    dtype = jnp.float32 if jnp.issubdtype(p.dtype, jnp.floating) else p.dtype
+    return jnp.zeros(p.shape, dtype)
+
+
+def adam_init(params) -> AdamState:
+    return AdamState(
+        step=jnp.zeros((), jnp.int32),
+        mu=jax.tree.map(_moment_like, params),
+        nu=jax.tree.map(_moment_like, params),
+    )
+
+
+def adam_update(
+    params,
+    grads,
+    state: AdamState,
+    lr: float = 1e-3,
+    b1: float = 0.9,
+    b2: float = 0.999,
+    eps: float = 1e-8,
+    weight_decay: float = 0.0,
+):
+    step = state.step + 1
+    mu = jax.tree.map(
+        lambda m, g: b1 * m + (1 - b1) * g.astype(m.dtype), state.mu, grads
+    )
+    nu = jax.tree.map(
+        lambda v, g: b2 * v + (1 - b2) * jnp.square(g.astype(v.dtype)),
+        state.nu,
+        grads,
+    )
+    t = step.astype(jnp.float32)
+    mu_hat_scale = 1.0 / (1 - b1**t)
+    nu_hat_scale = 1.0 / (1 - b2**t)
+
+    def upd(p, m, v):
+        u = (m * mu_hat_scale) / (jnp.sqrt(v * nu_hat_scale) + eps)
+        if weight_decay:
+            u = u + weight_decay * p.astype(u.dtype)
+        return (p.astype(u.dtype) - lr * u).astype(p.dtype)
+
+    new_params = jax.tree.map(upd, params, mu, nu)
+    return new_params, AdamState(step=step, mu=mu, nu=nu)
+
+
+def sgd_update(params, grads, lr: float = 1e-2, momentum_state=None, momentum: float = 0.9):
+    if momentum_state is None:
+        return jax.tree.map(lambda p, g: p - lr * g, params, grads), None
+    new_m = jax.tree.map(lambda m, g: momentum * m + g, momentum_state, grads)
+    return jax.tree.map(lambda p, m: p - lr * m, params, new_m), new_m
+
+
+def cosine_lr(step, base_lr: float, warmup: int, total: int, min_frac: float = 0.1):
+    step = jnp.asarray(step, jnp.float32)
+    warm = base_lr * step / jnp.maximum(warmup, 1)
+    prog = jnp.clip((step - warmup) / jnp.maximum(total - warmup, 1), 0.0, 1.0)
+    cos = base_lr * (min_frac + (1 - min_frac) * 0.5 * (1 + jnp.cos(jnp.pi * prog)))
+    return jnp.where(step < warmup, warm, cos)

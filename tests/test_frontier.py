@@ -1,0 +1,60 @@
+"""Padded set-ops: property-based (hypothesis) + unit tests."""
+import jax.numpy as jnp
+import numpy as np
+from hypothesis import given, settings, strategies as st
+
+from repro.core import frontier
+from repro.core.graph import INVALID
+
+ids_strategy = st.lists(
+    st.integers(min_value=0, max_value=500), min_size=0, max_size=64
+)
+
+
+@settings(max_examples=30, deadline=None)
+@given(ids_strategy)
+def test_unique_padded_matches_numpy(ids):
+    ids_np = np.asarray(ids or [0], dtype=np.int32)
+    cap = 128
+    out = np.asarray(frontier.unique_padded(jnp.asarray(ids_np), cap))
+    valid = out[out != INVALID]
+    expect = np.unique(ids_np)
+    np.testing.assert_array_equal(valid, expect)
+    # sorted, padding at the end
+    assert (np.sort(out) == out).all()
+
+
+@settings(max_examples=30, deadline=None)
+@given(ids_strategy, ids_strategy)
+def test_union_is_set_union(a, b):
+    a_np = np.asarray(a or [1], dtype=np.int32)
+    b_np = np.asarray(b or [2], dtype=np.int32)
+    out = np.asarray(
+        frontier.union_padded(jnp.asarray(a_np), jnp.asarray(b_np), 256)
+    )
+    valid = out[out != INVALID]
+    np.testing.assert_array_equal(valid, np.union1d(a_np, b_np))
+
+
+@settings(max_examples=30, deadline=None)
+@given(ids_strategy)
+def test_lookup_inverts_membership(ids):
+    ids_np = np.unique(np.asarray(ids or [3], dtype=np.int32))
+    table = frontier.pad_to(jnp.asarray(ids_np), 128)
+    pos = np.asarray(frontier.lookup(table, jnp.asarray(ids_np)))
+    assert (pos >= 0).all()
+    np.testing.assert_array_equal(np.asarray(table)[pos], ids_np)
+    # absent ids -> -1
+    absent = jnp.asarray([1001, 1002], jnp.int32)
+    assert (np.asarray(frontier.lookup(table, absent)) == -1).all()
+
+
+def test_lookup_invalid_is_minus_one():
+    table = frontier.pad_to(jnp.asarray([1, 2, 3], jnp.int32), 8)
+    out = frontier.lookup(table, jnp.asarray([INVALID], jnp.int32))
+    assert int(out[0]) == -1
+
+
+def test_count_valid():
+    v = frontier.pad_to(jnp.asarray([5, 6], jnp.int32), 10)
+    assert int(frontier.count_valid(v)) == 2

@@ -1,0 +1,64 @@
+"""GNN models + training loop: shapes, learning signal, coop==indep code."""
+import jax
+import jax.numpy as jnp
+import numpy as np
+import pytest
+
+from repro.models.gnn import GNNConfig, gnn_apply, init_gnn
+from repro.train.checkpoint import load_checkpoint, save_checkpoint
+from repro.train.loop import TrainConfig, train_gnn
+from repro.train.optim import adam_init, adam_update
+
+
+@pytest.mark.parametrize("model", ["gcn", "sage", "gat", "rgcn"])
+def test_models_train_one_step(small_dataset, model, rel_graph):
+    from repro.data.synthetic import SyntheticGraphDataset
+
+    if model == "rgcn":
+        ds = SyntheticGraphDataset(rel_graph, feature_dim=16, num_classes=4, seed=1)
+        cfg = GNNConfig(model=model, num_layers=2, in_dim=16, hidden_dim=32,
+                        num_classes=4, num_relations=4)
+    else:
+        ds = small_dataset
+        cfg = GNNConfig(model=model, num_layers=2, in_dim=32, hidden_dim=32,
+                        num_classes=8)
+    tc = TrainConfig(mode="independent", num_pes=2, local_batch=16,
+                     num_steps=2, fanout=4, eval_every=0)
+    r = train_gnn(ds, cfg, tc)
+    assert len(r.losses) == 2
+    assert all(np.isfinite(r.losses))
+
+
+def test_cooperative_loss_decreases(small_dataset):
+    cfg = GNNConfig(model="gcn", num_layers=2, in_dim=32, hidden_dim=64, num_classes=8)
+    tc = TrainConfig(mode="cooperative", num_pes=2, local_batch=32,
+                     num_steps=25, fanout=5, eval_every=0)
+    r = train_gnn(small_dataset, cfg, tc)
+    assert np.mean(r.losses[-5:]) < np.mean(r.losses[:5])
+
+
+def test_dependent_kappa_trains(small_dataset):
+    cfg = GNNConfig(model="gcn", num_layers=2, in_dim=32, hidden_dim=32, num_classes=8)
+    tc = TrainConfig(mode="cooperative", num_pes=2, local_batch=16,
+                     num_steps=6, fanout=4, kappa=4, eval_every=0)
+    r = train_gnn(small_dataset, cfg, tc)
+    assert all(np.isfinite(r.losses))
+
+
+def test_adam_reduces_quadratic():
+    params = {"x": jnp.asarray([5.0, -3.0])}
+    opt = adam_init(params)
+    for _ in range(200):
+        grads = jax.tree.map(lambda p: 2 * p, params)
+        params, opt = adam_update(params, grads, opt, lr=0.05)
+    assert float(jnp.abs(params["x"]).max()) < 0.5
+
+
+def test_checkpoint_roundtrip(tmp_path):
+    cfg = GNNConfig(model="gcn", num_layers=2, in_dim=8, hidden_dim=8, num_classes=4)
+    params = init_gnn(jax.random.PRNGKey(0), cfg)
+    path = str(tmp_path / "ckpt")
+    save_checkpoint(path, params, extra={"step": 3})
+    restored = load_checkpoint(path, params)
+    for a, b in zip(jax.tree.leaves(params), jax.tree.leaves(restored)):
+        np.testing.assert_array_equal(np.asarray(a), np.asarray(b))

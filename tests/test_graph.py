@@ -1,0 +1,53 @@
+"""Graph container + synthetic generator invariants."""
+import jax.numpy as jnp
+import numpy as np
+import pytest
+
+from repro.core.graph import Graph, INVALID
+from repro.data.synthetic import rmat_graph
+
+
+def test_csr_roundtrip():
+    src = np.array([1, 2, 3, 0, 2])
+    dst = np.array([0, 0, 1, 2, 3])
+    g = Graph.from_edges(src, dst, num_vertices=4)
+    assert g.num_edges == 5
+    assert g.num_vertices == 4
+    nbr, mask = g.neighbor_table(jnp.arange(4, dtype=jnp.int32))
+    # N(0) = {1, 2}
+    n0 = sorted(np.asarray(nbr[0])[np.asarray(mask[0])].tolist())
+    assert n0 == [1, 2]
+    n3 = np.asarray(nbr[3])[np.asarray(mask[3])].tolist()
+    assert n3 == [2]
+
+
+def test_degree_cap():
+    src = np.repeat(np.arange(50), 1)
+    dst = np.zeros(50, dtype=np.int64)
+    g = Graph.from_edges(src, dst, num_vertices=50, max_degree=8)
+    assert int(g.degrees[0]) == 8
+    assert g.max_degree == 8
+
+
+def test_invalid_seed_rows_masked(small_graph):
+    seeds = jnp.asarray([0, 1, INVALID], jnp.int32)
+    nbr, mask = small_graph.neighbor_table(seeds)
+    assert not bool(mask[2].any())
+    assert bool((nbr[2] == INVALID).all())
+
+
+def test_rmat_shape_stats():
+    g = rmat_graph(scale=10, edge_factor=8, max_degree=64, seed=0)
+    assert g.num_vertices == 1024
+    deg = np.asarray(g.degrees)
+    assert deg.max() <= 64
+    # power-law-ish: a heavy tail exists
+    assert deg.max() >= 4 * max(1, int(np.median(deg)))
+
+
+def test_edge_types_aligned(rel_graph):
+    seeds = jnp.arange(16, dtype=jnp.int32)
+    et = rel_graph.neighbor_edge_types(seeds)
+    _, mask = rel_graph.neighbor_table(seeds)
+    assert et.shape == mask.shape
+    assert int(et.max()) < rel_graph.num_edge_types

@@ -1,0 +1,42 @@
+"""Partitioners: balance + cross-edge ratio ordering."""
+import numpy as np
+
+from repro.core.partition import (
+    cross_edge_ratio,
+    greedy_bfs_partition,
+    hash_partition,
+    make_partition,
+)
+
+
+def test_hash_partition_balanced(small_graph):
+    p = hash_partition(small_graph.num_vertices, 4)
+    counts = np.bincount(np.asarray(p.owner), minlength=4)
+    assert counts.min() > 0.8 * counts.mean()
+
+
+def test_hash_cross_edge_ratio_near_theory(small_graph):
+    """c ~ (P-1)/P for random partitioning (§3.1)."""
+    for P in (2, 4, 8):
+        c = cross_edge_ratio(small_graph, hash_partition(small_graph.num_vertices, P))
+        assert abs(c - (P - 1) / P) < 0.08, (P, c)
+
+
+def test_bfs_partition_cuts_fewer_edges(small_graph):
+    """The METIS-proxy partitioner must beat random (Table 7 premise)."""
+    P = 4
+    c_hash = cross_edge_ratio(small_graph, hash_partition(small_graph.num_vertices, P))
+    c_bfs = cross_edge_ratio(small_graph, greedy_bfs_partition(small_graph, P))
+    assert c_bfs < c_hash
+
+
+def test_bfs_partition_covers_all(small_graph):
+    p = greedy_bfs_partition(small_graph, 4)
+    owner = np.asarray(p.owner)
+    assert (owner >= 0).all() and (owner < 4).all()
+
+
+def test_make_partition_dispatch(small_graph):
+    for kind in ("hash", "block", "bfs"):
+        p = make_partition(kind, small_graph, 4)
+        assert p.num_parts == 4

@@ -1,0 +1,41 @@
+"""Empirical validation of Theorems 3.1 / 3.2 / 3.3 (paper §4.1)."""
+import pytest
+
+from repro.core.samplers import make_sampler
+from repro.core.theory import (
+    is_concave,
+    is_monotone_nonincreasing,
+    measure_density_curve,
+    measure_work_curve,
+)
+
+BATCHES = [32, 64, 128, 256, 512]
+
+
+@pytest.mark.parametrize("name", ["ns", "labor0", "labor*"])
+def test_work_monotonicity_thm31(small_graph, name):
+    """E[|S^L|]/|S^0| nonincreasing in batch size."""
+    curve = measure_work_curve(
+        small_graph, make_sampler(name, fanout=5), BATCHES,
+        num_layers=2, trials=6, fanout_for_caps=5,
+    )
+    assert is_monotone_nonincreasing(curve.work_per_seed, tol=0.05), (
+        name, curve.work_per_seed,
+    )
+
+
+@pytest.mark.parametrize("name", ["ns", "labor0"])
+def test_subgraph_concavity_thm32(small_graph, name):
+    """E[|S^L|] concave in batch size."""
+    curve = measure_work_curve(
+        small_graph, make_sampler(name, fanout=5), BATCHES,
+        num_layers=2, trials=6, fanout_for_caps=5,
+    )
+    assert is_concave(curve.batch_sizes, curve.expected_sl, tol=0.1), (
+        name, curve.expected_sl,
+    )
+
+
+def test_density_nondecreasing_thm33(small_graph):
+    bs, density = measure_density_curve(small_graph, BATCHES, trials=6)
+    assert all(b >= a * 0.95 for a, b in zip(density, density[1:])), density
