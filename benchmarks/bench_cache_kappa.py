@@ -3,23 +3,17 @@
 ``--coop`` additionally runs the cooperative per-PE owned caches
 (Fig 5b): cooperative feature loading deduplicates cache contents across
 PEs, so the global effective capacity grows P-fold.
+
+Both input-id streams come from ``MinibatchEngine.stream`` — one engine
+per (mode, kappa) cell, identical global batch size.
 """
 from __future__ import annotations
 
-import jax.numpy as jnp
 import numpy as np
 
 from benchmarks.common import Csv, bench_graph
 from repro.core.cache import CooperativeCacheArray, LRUCache
-from repro.core.cooperative import (
-    CoopCapacityPlan,
-    SimExecutor,
-    build_cooperative_minibatch,
-)
-from repro.core.minibatch import CapacityPlan, build_minibatch
-from repro.core.partition import hash_partition
-from repro.core.rng import DependentRNG
-from repro.core.samplers import make_sampler
+from repro.engine import EngineConfig, MinibatchEngine
 
 KAPPAS = [1, 4, 16, 64, 256, None]  # None = infinite dependency
 STEPS = 24
@@ -27,35 +21,18 @@ BATCH = 128
 P = 4
 
 
-def _indep_stream(g, kappa, seed=0):
-    sampler = make_sampler("labor0", fanout=5)
-    caps = CapacityPlan.geometric(BATCH, 2, 5, g.num_vertices)
-    rng_np = np.random.default_rng(seed)
-    for step in range(STEPS):
-        seeds = rng_np.choice(g.num_vertices, size=BATCH, replace=False)
-        rng = DependentRNG(base_seed=11, kappa=kappa, step=step)
-        mb = build_minibatch(g, sampler, jnp.asarray(seeds, jnp.int32), rng, 2, caps)
-        yield np.asarray(mb.input_ids)
-
-
-def _coop_stream(g, kappa, seed=0):
-    part = hash_partition(g.num_vertices, P)
-    owner = np.asarray(part.owner)
-    owned = [np.nonzero(owner == p)[0] for p in range(P)]
-    sampler = make_sampler("labor0", fanout=5)
-    caps = CoopCapacityPlan.geometric(BATCH // P, 2, 5, g.num_vertices, P)
-    ex = SimExecutor(P)
-    IM = np.iinfo(np.int32).max
-    for step in range(STEPS):
-        rng_np = np.random.default_rng(seed + step)
-        seeds = np.full((P, BATCH // P), IM, np.int32)
-        for p in range(P):
-            seeds[p] = rng_np.choice(owned[p], size=BATCH // P, replace=False)
-        rng = DependentRNG(base_seed=11, kappa=kappa, step=step)
-        mb = build_cooperative_minibatch(
-            g, sampler, part, jnp.asarray(seeds), rng, 2, caps, ex
-        )
-        yield np.asarray(mb.input_ids)  # (P, capL)
+def _input_ids(g, mode: str, kappa):
+    num_pes = P if mode == "cooperative" else 1
+    eng = MinibatchEngine.from_config(
+        g,
+        EngineConfig(
+            mode=mode, num_pes=num_pes, local_batch=BATCH // num_pes,
+            num_layers=2, sampler="labor0", fanout=5,
+            schedule="smoothed", kappa=kappa, seed=11,
+        ),
+    )
+    for item in eng.stream(num_steps=STEPS):
+        yield np.asarray(item.plan.input_ids)  # (P, capL) when cooperative
 
 
 def run(coop: bool = True) -> Csv:
@@ -64,13 +41,13 @@ def run(coop: bool = True) -> Csv:
     csv = Csv(["mode", "kappa", "miss_rate"])
     for kappa in KAPPAS:
         c = LRUCache(capacity=cache_capacity)
-        for ids in _indep_stream(g, kappa):
-            c.access_batch(ids)
+        for ids in _input_ids(g, "independent", kappa):
+            c.access_batch(ids.ravel())
         csv.add("independent", kappa if kappa else "inf", round(c.miss_rate, 4))
     if coop:
         for kappa in KAPPAS:
             arr = CooperativeCacheArray(num_pes=P, capacity_per_pe=cache_capacity // P)
-            for per_pe in _coop_stream(g, kappa):
+            for per_pe in _input_ids(g, "cooperative", kappa):
                 arr.access(per_pe)
             csv.add("cooperative", kappa if kappa else "inf", round(arr.miss_rate, 4))
     return csv

@@ -6,26 +6,21 @@ then converts them to modeled stage times with the paper's bandwidth
 model (Table 1) using TPU v5e constants — the CPU-container stand-in for
 the paper's wall-clock Tables 4/5.
 
+Both modes are measured through the SAME ``MinibatchEngine`` facade —
+one ``EngineConfig`` per (sampler, P, partition) cell, ``with_mode``
+flipping the comparison axis.
+
     sampling  ~ |S^l| / beta
     loading   ~ |S^L| d rho / beta  (+ A2A c/alpha for cooperative)
     F/B       ~ (flops/gamma_eff)   (+ A2A d c/alpha for cooperative)
 """
 from __future__ import annotations
 
-import jax.numpy as jnp
 import numpy as np
 
 from benchmarks.common import Csv, bench_graph
-from repro.core.cooperative import (
-    CoopCapacityPlan,
-    SimExecutor,
-    build_cooperative_minibatch,
-    plan_stats,
-)
-from repro.core.minibatch import CapacityPlan, build_minibatch, epoch_stats
-from repro.core.partition import cross_edge_ratio, hash_partition, make_partition
-from repro.core.rng import DependentRNG
-from repro.core.samplers import make_sampler
+from repro.core.partition import cross_edge_ratio
+from repro.engine import EngineConfig, MinibatchEngine
 
 # TPU v5e island constants (DESIGN.md §3): alpha=ICI, beta=host/DCN, gamma=HBM
 ALPHA = 50e9
@@ -38,48 +33,44 @@ LAYERS = 3
 GLOBAL_BATCH = 512
 
 
+def _edges_per_pe_max(plan) -> int:
+    """max over PEs of each PE's TOTAL edges across layers.
+
+    ``stats()`` reports per-layer maxima; summing those over layers would
+    overestimate whenever different PEs attain different layers' maxima.
+    """
+    per_pe = sum(np.asarray(l.mask).sum(axis=(-2, -1)) for l in plan.layers)
+    return int(np.max(per_pe))
+
+
 def _measure(g, P: int, sampler_name: str, partition: str = "hash"):
-    b = GLOBAL_BATCH // P
-    part = make_partition(partition, g, P)
-    owner = np.asarray(part.owner)
-    owned = [np.nonzero(owner == p)[0] for p in range(P)]
-    IM = np.iinfo(np.int32).max
-    sampler = make_sampler(sampler_name, fanout=5)
-    caps_i = CapacityPlan.geometric(b, LAYERS, 5, g.num_vertices)
-    caps_c = CoopCapacityPlan.geometric(b, LAYERS, 5, g.num_vertices, P)
-    ex = SimExecutor(P)
+    cfg = EngineConfig(
+        mode="independent", num_pes=P, local_batch=GLOBAL_BATCH // P,
+        num_layers=LAYERS, sampler=sampler_name, fanout=5,
+        partition=partition, partition_seed=0,
+    )
+    # one engine pair per cell; trials vary only the step (iid schedule
+    # => fresh seed batch AND fresh sampler RNG each step)
+    eng_i = MinibatchEngine.from_config(g, cfg)
+    eng_c = MinibatchEngine.from_config(g, cfg.with_mode("cooperative"))
     indep, coop = [], []
     for t in range(TRIALS):
-        rng = DependentRNG(base_seed=31 * t, kappa=1, step=0)
-        rng_np = np.random.default_rng(t)
-        # independent: P separate batches (max per-PE counts)
-        st_i = {"S3": 0, "E": 0}
-        for p in range(P):
-            seeds = rng_np.choice(g.num_vertices, size=b, replace=False)
-            mb = build_minibatch(
-                g, sampler, jnp.asarray(seeds, jnp.int32), rng, LAYERS, caps_i
-            )
-            s = epoch_stats(mb)
-            st_i["S3"] = max(st_i["S3"], s[f"S{LAYERS}"])
-            st_i["E"] = max(st_i["E"], sum(s[f"E{l}"] for l in range(LAYERS)))
-        indep.append(st_i)
-        # cooperative: one global batch, owned seeds
-        seeds = np.full((P, b), IM, np.int32)
-        for p in range(P):
-            seeds[p] = rng_np.choice(owned[p], size=min(b, len(owned[p])), replace=False)
-        mb = build_cooperative_minibatch(
-            g, sampler, part, jnp.asarray(seeds), rng, LAYERS, caps_c, ex
+        plan_i = eng_i.build_plan(eng_i.seed_batch(t), step=t)
+        s_i = plan_i.stats()
+        indep.append(
+            {"S3": s_i[f"S{LAYERS}"], "E": _edges_per_pe_max(plan_i), "comm": 0}
         )
-        s = plan_stats(mb, ex)
+        plan_c = eng_c.build_plan(eng_c.seed_batch(t), step=t)
+        s_c = plan_c.stats()
         coop.append(
             {
-                "S3": s["inputs"],
-                "E": sum(s[f"E{l}"] for l in range(LAYERS)),
-                "comm": sum(s[f"comm{l+1}"] for l in range(LAYERS)),
+                "S3": s_c["inputs"],
+                "E": _edges_per_pe_max(plan_c),
+                "comm": sum(s_c[f"comm{l+1}"] for l in range(LAYERS)),
             }
         )
     avg = lambda rows, k: float(np.mean([r[k] for r in rows]))
-    c = cross_edge_ratio(g, part)
+    c = cross_edge_ratio(g, eng_c.part)
     return (
         {"S3": avg(indep, "S3"), "E": avg(indep, "E"), "comm": 0.0},
         {"S3": avg(coop, "S3"), "E": avg(coop, "E"), "comm": avg(coop, "comm")},

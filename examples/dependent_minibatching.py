@@ -4,15 +4,14 @@
 
 Shows the smoothed-RNG mechanism (A.7) directly — per-vertex variates
 drift slowly within a kappa window — and the resulting LRU miss-rate
-drop for vertex-embedding fetches.
+drop for vertex-embedding fetches, streaming plans through the
+``MinibatchEngine`` with double-buffered prefetch.
 """
 import jax.numpy as jnp
 import numpy as np
 
-from repro.core.cache import LRUCache
-from repro.core.minibatch import CapacityPlan, build_minibatch
+from repro.core import EngineConfig, LRUCache, MinibatchEngine
 from repro.core.rng import DependentRNG
-from repro.core.samplers import make_sampler
 from repro.data import rmat_graph
 
 graph = rmat_graph(scale=12, edge_factor=8, max_degree=32, seed=0)
@@ -25,16 +24,17 @@ for step in (1, 16, 48, 64):
     c = float(jnp.corrcoef(r0, r)[0, 1])
     print(f"corr(r_t @ step 0, step {step:3d}) = {c:+.3f}")
 
-# 2) LRU miss rate vs kappa
-sampler = make_sampler("labor0", fanout=5)
-caps = CapacityPlan.geometric(128, 2, 5, graph.num_vertices)
+# 2) LRU miss rate vs kappa: one engine per dependency window
 for kappa in (1, 16, 64, None):
+    eng = MinibatchEngine.from_config(
+        graph,
+        EngineConfig(
+            mode="independent", num_pes=1, local_batch=128, num_layers=2,
+            sampler="labor0", fanout=5, schedule="smoothed", kappa=kappa,
+            seed=11,
+        ),
+    )
     cache = LRUCache(capacity=graph.num_vertices // 2)
-    rng_np = np.random.default_rng(0)
-    for step in range(20):
-        seeds = rng_np.choice(graph.num_vertices, size=128, replace=False)
-        rng = DependentRNG(base_seed=11, kappa=kappa, step=step)
-        mb = build_minibatch(graph, sampler, jnp.asarray(seeds, jnp.int32),
-                             rng, 2, caps)
-        cache.access_batch(np.asarray(mb.input_ids))
+    for item in eng.stream(num_steps=20):
+        cache.access_batch(np.asarray(item.plan.input_ids).ravel())
     print(f"kappa={str(kappa):>4s}  LRU miss rate = {cache.miss_rate:.3f}")

@@ -1,25 +1,14 @@
-"""Quickstart: cooperative vs independent minibatching in ~40 lines.
+"""Quickstart: cooperative vs independent minibatching in ~30 lines.
 
     PYTHONPATH=src python examples/quickstart.py
 
-Builds a synthetic power-law graph, samples one minibatch both ways at
-identical global batch size, and prints the work reduction (the paper's
-core claim), then trains a GCN for a few cooperative steps.
+Builds a synthetic power-law graph, then samples one minibatch plan both
+ways — through the SAME ``MinibatchEngine`` API, differing only in
+``mode`` — at identical global batch size, and prints the feature-
+loading work reduction (the paper's core claim).  Finally trains a GCN
+for a few cooperative steps.
 """
-import jax.numpy as jnp
-import numpy as np
-
-from repro.core import (
-    CapacityPlan,
-    CoopCapacityPlan,
-    DependentRNG,
-    SimExecutor,
-    build_cooperative_minibatch,
-    build_minibatch,
-    plan_stats,
-)
-from repro.core.partition import hash_partition
-from repro.core.samplers import make_sampler
+from repro.core import EngineConfig, MinibatchEngine
 from repro.data import rmat_graph
 from repro.data.synthetic import SyntheticGraphDataset
 from repro.models.gnn import GNNConfig
@@ -30,44 +19,32 @@ P, B_LOCAL, LAYERS, FANOUT = 4, 128, 3, 5
 graph = rmat_graph(scale=12, edge_factor=8, max_degree=32, seed=0)
 print(f"graph: |V|={graph.num_vertices} |E|={graph.num_edges}")
 
-sampler = make_sampler("labor0", fanout=FANOUT)
-rng = DependentRNG(base_seed=0, kappa=1, step=0)
-IM = np.iinfo(np.int32).max
+# ONE config; the minibatching mode is the only thing that changes.
+cfg = EngineConfig(
+    mode="independent", num_pes=P, local_batch=B_LOCAL, num_layers=LAYERS,
+    sampler="labor0", fanout=FANOUT, seed=0,
+)
 
 # --- independent: P PEs, each with its own batch of size B_LOCAL ---
-caps_i = CapacityPlan.geometric(B_LOCAL, LAYERS, FANOUT, graph.num_vertices)
-rng_np = np.random.default_rng(0)
-indep_inputs = 0
-for p in range(P):
-    seeds = rng_np.choice(graph.num_vertices, size=B_LOCAL, replace=False)
-    mb = build_minibatch(graph, sampler, jnp.asarray(seeds, jnp.int32), rng,
-                         LAYERS, caps_i)
-    indep_inputs += int(mb.num_inputs)
+eng_i = MinibatchEngine.from_config(graph, cfg)
+plan_i = eng_i.build_plan(eng_i.seed_batch(0))
+indep_inputs = int(plan_i.num_inputs)  # total rows fetched across all PEs
 
 # --- cooperative: ONE global batch of size P*B_LOCAL, owner-partitioned ---
-part = hash_partition(graph.num_vertices, P)
-owner = np.asarray(part.owner)
-seeds = np.full((P, B_LOCAL), IM, np.int32)
-for p in range(P):
-    own = np.nonzero(owner == p)[0]
-    seeds[p] = rng_np.choice(own, size=B_LOCAL, replace=False)
-caps_c = CoopCapacityPlan.geometric(B_LOCAL, LAYERS, FANOUT,
-                                    graph.num_vertices, P)
-mb_c = build_cooperative_minibatch(graph, sampler, part, jnp.asarray(seeds),
-                                   rng, LAYERS, caps_c, SimExecutor(P))
-stats = plan_stats(mb_c, SimExecutor(P))
-coop_inputs = P * stats["inputs"]  # upper bound: max-per-PE * P
+eng_c = MinibatchEngine.from_config(graph, cfg.with_mode("cooperative"))
+plan_c = eng_c.build_plan(eng_c.seed_batch(0))
+coop_inputs = P * plan_c.stats()["inputs"]  # upper bound: max-per-PE * P
 
 print(f"independent total feature rows fetched : {indep_inputs}")
 print(f"cooperative total feature rows fetched : <= {coop_inputs} "
       f"({indep_inputs / coop_inputs:.2f}x saving)")
 
-# --- train a few cooperative steps ---
+# --- train a few cooperative steps (same engine under the hood) ---
 ds = SyntheticGraphDataset(graph, feature_dim=32, num_classes=8, seed=0)
-cfg = GNNConfig(model="gcn", num_layers=2, in_dim=32, hidden_dim=64,
+gnn = GNNConfig(model="gcn", num_layers=2, in_dim=32, hidden_dim=64,
                 num_classes=8)
 tc = TrainConfig(mode="cooperative", num_pes=2, local_batch=64, num_steps=20,
                  fanout=FANOUT, eval_every=0)
-result = train_gnn(ds, cfg, tc)
+result = train_gnn(ds, gnn, tc)
 print(f"cooperative training loss: {result.losses[0]:.3f} -> "
       f"{result.losses[-1]:.3f}")

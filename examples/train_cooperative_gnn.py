@@ -5,9 +5,12 @@
 The paper's kind is minibatch GNN *training*, where models are small
 (~1-3M params; the scale lives in the graph) — this driver trains the
 paper's 3-layer GCN (hidden 256) on a 16k-vertex synthetic power-law
-graph for a few hundred steps with cooperative minibatching (P=4 PEs,
-SimExecutor) and smoothed dependent batches (kappa=16), evaluating
-micro-F1 on the validation split, with checkpointing.
+graph for a few hundred steps with cooperative minibatching (P=4 PEs)
+and dependent batches (smoothed kappa=16 by default, ``--schedule
+nested`` for §3.2 nesting), evaluating micro-F1 on the validation
+split, with checkpointing.  All plan construction goes through the
+unified ``MinibatchEngine`` inside ``train_gnn`` — switch
+``--mode independent`` and nothing else changes.
 """
 import argparse
 import time
@@ -24,7 +27,11 @@ from repro.train.loop import TrainConfig, evaluate, train_gnn
 def main():
     ap = argparse.ArgumentParser()
     ap.add_argument("--steps", type=int, default=300)
+    ap.add_argument("--mode", default="cooperative",
+                    choices=["cooperative", "independent"])
     ap.add_argument("--pes", type=int, default=4)
+    ap.add_argument("--schedule", default="smoothed",
+                    choices=["iid", "smoothed", "nested"])
     ap.add_argument("--kappa", type=int, default=16)
     ap.add_argument("--sampler", default="labor0")
     ap.add_argument("--out", default="/tmp/coop_gnn_ckpt")
@@ -35,9 +42,10 @@ def main():
     cfg = GNNConfig(model="gcn", num_layers=3, in_dim=64, hidden_dim=256,
                     num_classes=16)
     tc = TrainConfig(
-        mode="cooperative", num_pes=args.pes, local_batch=64,
-        num_steps=args.steps, fanout=10, kappa=args.kappa,
-        sampler=args.sampler, eval_every=max(args.steps // 6, 1),
+        mode=args.mode, num_pes=args.pes, local_batch=64,
+        num_steps=args.steps, fanout=10, schedule=args.schedule,
+        kappa=args.kappa, sampler=args.sampler,
+        eval_every=max(args.steps // 6, 1),
     )
     t0 = time.time()
     result = train_gnn(ds, cfg, tc)

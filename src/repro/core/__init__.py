@@ -1,4 +1,14 @@
-"""Core: the paper's contribution — cooperative & dependent minibatching."""
+"""Core: the paper's contribution — cooperative & dependent minibatching.
+
+Two layers live here:
+
+* the **kernel layer** — the low-level builders (``build_minibatch``,
+  ``build_cooperative_minibatch``), capacity plans, partitions, RNG
+  schedules, caches; stable, mode-specific, fully jittable;
+* the **facade** — :class:`repro.engine.MinibatchEngine` and friends,
+  re-exported below, which wire the kernel layer behind one config so
+  consumers never branch on minibatching mode.
+"""
 from repro.core.graph import Graph, INVALID
 from repro.core.partition import Partition, make_partition, cross_edge_ratio
 from repro.core.rng import DependentRNG
@@ -46,4 +56,30 @@ __all__ = [
     "LRUCache",
     "CooperativeCacheArray",
     "FeatureStore",
+    # engine facade (lazy re-exports, see __getattr__)
+    "CapacityPolicy",
+    "EngineConfig",
+    "MinibatchEngine",
+    "MinibatchStream",
+    "Plan",
+    "StreamItem",
 ]
+
+_ENGINE_EXPORTS = {
+    "CapacityPolicy",
+    "EngineConfig",
+    "MinibatchEngine",
+    "MinibatchStream",
+    "Plan",
+    "StreamItem",
+}
+
+
+def __getattr__(name):
+    # Lazy: repro.engine imports the kernel modules above, so a direct
+    # top-of-file import here would be circular.
+    if name in _ENGINE_EXPORTS:
+        import repro.engine as _engine
+
+        return getattr(_engine, name)
+    raise AttributeError(f"module {__name__!r} has no attribute {name!r}")

@@ -112,9 +112,30 @@ class CoopLayer:
 
 @dataclass(frozen=True)
 class CoopMinibatch:
+    """Cooperative L-layer plan.
+
+    Satisfies the :class:`repro.engine.Plan` protocol (``layers`` /
+    ``input_ids`` / ``seed_ids`` / :meth:`gather_inputs` / :meth:`stats`)
+    alongside :class:`repro.core.minibatch.Minibatch`.  Under
+    :class:`SimExecutor` every leaf carries a leading ``(P, ...)`` axis.
+    """
+
     layers: tuple[CoopLayer, ...]
     input_ids: jax.Array  # (cap_L,) owned S_p^L — features this PE fetches
     seed_ids: jax.Array
+
+    def gather_inputs(self, store) -> jax.Array:
+        """Owned input embeddings (no cross-PE duplication, Fig. 7b)."""
+        return store.gather(self.input_ids)
+
+    def stats(self) -> dict:
+        """Per-PE max counts (Table 7).  Requires the stacked Sim layout."""
+        if self.seed_ids.ndim != 2 or self.layers[0].slot_to_tilde.ndim != 3:
+            raise ValueError(
+                "CoopMinibatch.stats() needs the stacked SimExecutor layout; "
+                "plans built per-PE under ShardExecutor have no global view"
+            )
+        return plan_stats(self, SimExecutor(self.seed_ids.shape[0]))
 
 
 jax.tree_util.register_pytree_node(

@@ -43,15 +43,42 @@ class MinibatchLayer:
 
 @dataclass(frozen=True)
 class Minibatch:
-    """L-layer plan; ``input_ids`` = S^L (the vertices whose features load)."""
+    """L-layer plan; ``input_ids`` = S^L (the vertices whose features load).
+
+    Satisfies the :class:`repro.engine.Plan` protocol: uniform
+    ``layers``/``input_ids``/``seed_ids`` plus :meth:`gather_inputs` and
+    :meth:`stats`, so consumers can stay mode-agnostic.  Leaves may carry
+    a leading PE axis when built stacked (``jax.vmap`` over seed rows).
+    """
 
     layers: tuple[MinibatchLayer, ...]
-    input_ids: jax.Array  # (cap_L,)
+    input_ids: jax.Array  # (cap_L,) or (P, cap_L) when stacked
     seed_ids: jax.Array   # (cap_0,) = layers[0].seeds
 
     @property
     def num_inputs(self):
         return frontier.count_valid(self.input_ids)
+
+    def gather_inputs(self, store) -> jax.Array:
+        """Input-layer embeddings from a :class:`FeatureStore`-like object."""
+        return store.gather(self.input_ids)
+
+    def stats(self) -> dict:
+        """Uniform per-layer counts: S{l}, E{l}, inputs, comm{l+1} (=0).
+
+        Scalars for a single plan; *max over the PE axis* for a stacked
+        plan (same convention as cooperative ``plan_stats``).
+        """
+        stacked = self.input_ids.ndim > 1
+        red = (lambda x: int(jnp.max(x))) if stacked else (lambda x: int(x))
+        out = {}
+        for l, layer in enumerate(self.layers):
+            out[f"S{l}"] = red(jnp.sum(layer.seeds != INVALID, axis=-1))
+            out[f"E{l}"] = red(jnp.sum(layer.mask, axis=(-2, -1)))
+            out[f"comm{l+1}"] = 0  # independent mode never communicates
+        out[f"S{len(self.layers)}"] = red(jnp.sum(self.input_ids != INVALID, axis=-1))
+        out["inputs"] = out[f"S{len(self.layers)}"]
+        return out
 
 
 jax.tree_util.register_pytree_node(

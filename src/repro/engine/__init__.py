@@ -1,0 +1,27 @@
+"""Unified minibatching engine: one facade over both modes of the paper.
+
+    cfg = EngineConfig(mode="cooperative", num_pes=4, local_batch=64,
+                       num_layers=3, sampler="labor0", fanout=10,
+                       schedule="smoothed", kappa=16)
+    engine = MinibatchEngine.from_config(graph, cfg, dataset=ds)
+    for item in engine.stream(num_steps=100):
+        H = item.plan.gather_inputs(store)
+        logits = engine.apply_model(params, gnn_cfg, item.plan, H)
+
+Swap ``mode="independent"`` and nothing else changes — the paper's
+controlled comparison (§4.3) in one flag.  The low-level builders in
+``repro.core`` remain the stable kernel layer underneath.
+"""
+from repro.engine.config import CapacityPolicy, EngineConfig
+from repro.engine.engine import MinibatchEngine
+from repro.engine.plan import Plan
+from repro.engine.stream import MinibatchStream, StreamItem
+
+__all__ = [
+    "CapacityPolicy",
+    "EngineConfig",
+    "MinibatchEngine",
+    "MinibatchStream",
+    "Plan",
+    "StreamItem",
+]

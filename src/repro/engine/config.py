@@ -1,0 +1,82 @@
+"""Engine configuration: everything that fixes a minibatching pipeline.
+
+One :class:`EngineConfig` pins the paper's whole experimental axis system
+(§3.1–§3.2): minibatching mode (independent vs cooperative at identical
+global batch size), sampler, layer/fanout budget, capacity policy,
+dependency schedule (iid / smoothed-κ / nested-κ), partition strategy,
+and executor backend.  :class:`repro.engine.MinibatchEngine.from_config`
+derives all the kernel-layer objects (capacity plans, partitions, seed
+generators, executors) from it so consumers never hand-wire them.
+"""
+from __future__ import annotations
+
+from dataclasses import dataclass, field, replace
+from typing import Optional
+
+MODES = ("independent", "cooperative")
+SCHEDULES = ("iid", "smoothed", "nested")
+EXECUTORS = ("sim", "shard")
+
+
+@dataclass(frozen=True)
+class CapacityPolicy:
+    """Safety factors feeding the geometric capacity bounds (Thm 3.2).
+
+    Defaults match ``CapacityPlan.geometric`` / ``CoopCapacityPlan.geometric``
+    so engine-built plans are bit-identical to hand-built ones.
+    """
+
+    safety: float = 1.25          # independent frontier growth slack
+    coop_safety: float = 1.5      # cooperative owned/request frontier slack
+    bucket_safety: float = 2.5    # per-peer A2A bucket slack
+    round_to: int = 8
+
+
+@dataclass(frozen=True)
+class EngineConfig:
+    """Declarative spec for a :class:`repro.engine.MinibatchEngine`."""
+
+    mode: str = "independent"            # independent | cooperative
+    num_pes: int = 1                     # P; global batch = local_batch * P
+    local_batch: int = 64                # b
+    num_layers: int = 2                  # L
+    sampler: str = "labor0"              # ns | labor0 | labor* | rw | full
+    fanout: int = 10
+    schedule: str = "iid"                # iid | smoothed | nested
+    kappa: Optional[int] = 1             # dependency window (None = infinite)
+    partition: str = "hash"              # hash | block | bfs (cooperative only)
+    executor: str = "sim"                # sim | shard (cooperative only)
+    axis_name: str = "data"              # mesh axis for the shard executor
+    seed: int = 0
+    partition_seed: Optional[int] = None  # defaults to ``seed``
+    capacity: CapacityPolicy = field(default_factory=CapacityPolicy)
+
+    def __post_init__(self):
+        if self.mode not in MODES:
+            raise ValueError(f"mode must be one of {MODES}, got {self.mode!r}")
+        if self.schedule not in SCHEDULES:
+            raise ValueError(
+                f"schedule must be one of {SCHEDULES}, got {self.schedule!r}"
+            )
+        if self.executor not in EXECUTORS:
+            raise ValueError(
+                f"executor must be one of {EXECUTORS}, got {self.executor!r}"
+            )
+        if self.num_pes < 1 or self.local_batch < 1 or self.num_layers < 1:
+            raise ValueError("num_pes, local_batch, num_layers must be >= 1")
+        if self.schedule == "nested" and not self.kappa:
+            raise ValueError("nested schedule requires a finite kappa >= 1")
+
+    @property
+    def global_batch(self) -> int:
+        return self.local_batch * self.num_pes
+
+    @property
+    def effective_kappa(self) -> Optional[int]:
+        """RNG dependency window: iid forces κ=1 (fresh seed every step)."""
+        return 1 if self.schedule == "iid" else self.kappa
+
+    def with_mode(self, mode: str) -> "EngineConfig":
+        """Same pipeline, other minibatching mode — the paper's controlled
+        comparison at identical global batch size (§4.3)."""
+        return replace(self, mode=mode)

@@ -1,0 +1,247 @@
+"""``MinibatchEngine`` — the unified minibatch-construction facade.
+
+The paper's central comparison (§3.1–§3.2, Fig. 7) runs *the same*
+training computation under two minibatching modes at identical global
+batch size.  The engine makes that a config flag instead of two API
+stacks: ``from_config`` derives capacity plans, partitions, executors,
+and seed-batch generators from one :class:`EngineConfig`; ``build_plan``
+returns a :class:`repro.engine.Plan` either way; ``apply_model`` owns
+the single remaining mode dispatch (per-PE vmap vs all-to-all
+redistribution).  The low-level builders (``build_minibatch``,
+``build_cooperative_minibatch``) stay the stable kernel layer — the
+engine never re-implements sampling, it only wires it.
+
+Dependency schedules (§3.2 + A.7) are uniform too: ``iid`` (fresh seed
+per step), ``smoothed`` (κ-window RNG interpolation), and ``nested``
+(κ sub-batches carved from one group batch under a frozen group RNG).
+``rng_state(step)`` is traceable, so one compiled train step serves the
+whole schedule.
+"""
+from __future__ import annotations
+
+from dataclasses import dataclass
+from functools import cached_property
+from typing import Optional
+
+import jax
+import jax.numpy as jnp
+import numpy as np
+
+from repro.core.cooperative import (
+    CoopCapacityPlan,
+    CoopMinibatch,
+    Executor,
+    ShardExecutor,
+    SimExecutor,
+    build_cooperative_minibatch,
+)
+from repro.core.dependent import NestedSchedule
+from repro.core.feature_loader import FeatureStore
+from repro.core.graph import Graph, INVALID
+from repro.core.minibatch import CapacityPlan, Minibatch, build_minibatch
+from repro.core.partition import Partition, make_partition
+from repro.core.rng import DependentRNG, RNGState
+from repro.core.samplers.base import Sampler, make_sampler
+from repro.engine.config import EngineConfig
+from repro.engine.plan import Plan
+from repro.engine.stream import MinibatchStream
+
+
+@dataclass
+class MinibatchEngine:
+    """One object that turns (graph, config) into a stream of plans."""
+
+    config: EngineConfig
+    graph: Graph
+    sampler: Sampler
+    caps: CapacityPlan | CoopCapacityPlan
+    ex: Optional[Executor] = None           # cooperative only
+    part: Optional[Partition] = None        # cooperative only
+    dataset: Optional[object] = None        # seeds come from train split if set
+    store: Optional[FeatureStore] = None
+
+    # ------------------------------------------------------------------
+    # Construction
+    # ------------------------------------------------------------------
+    @classmethod
+    def from_config(
+        cls, graph: Graph, config: EngineConfig, dataset=None
+    ) -> "MinibatchEngine":
+        """Derive capacities, partition, and executor from the config."""
+        cfg, cap = config, config.capacity
+        V = graph.num_vertices
+        sampler = make_sampler(cfg.sampler, fanout=cfg.fanout)
+        if cfg.mode == "cooperative":
+            caps = CoopCapacityPlan.geometric(
+                cfg.local_batch, cfg.num_layers, cfg.fanout, V, cfg.num_pes,
+                safety=cap.coop_safety, bucket_safety=cap.bucket_safety,
+                round_to=cap.round_to,
+            )
+            pseed = cfg.seed if cfg.partition_seed is None else cfg.partition_seed
+            part = make_partition(cfg.partition, graph, cfg.num_pes, seed=pseed)
+            ex: Executor = (
+                SimExecutor(cfg.num_pes)
+                if cfg.executor == "sim"
+                else ShardExecutor(cfg.num_pes, axis_name=cfg.axis_name)
+            )
+        else:
+            caps = CapacityPlan.geometric(
+                cfg.local_batch, cfg.num_layers, cfg.fanout, V,
+                safety=cap.safety, round_to=cap.round_to,
+            )
+            part, ex = None, None
+        store = FeatureStore(dataset.features) if dataset is not None else None
+        return cls(
+            config=cfg, graph=graph, sampler=sampler, caps=caps, ex=ex,
+            part=part, dataset=dataset, store=store,
+        )
+
+    # ------------------------------------------------------------------
+    # RNG schedule
+    # ------------------------------------------------------------------
+    def _nested_sched(self) -> NestedSchedule:
+        cfg = self.config
+        return NestedSchedule(
+            base_seed=cfg.seed, kappa=cfg.kappa, sub_batch_size=cfg.local_batch
+        )
+
+    def rng_at(self, step: int) -> DependentRNG:
+        """Host-side RNG for ``step`` under the configured schedule."""
+        cfg = self.config
+        if cfg.schedule == "nested":
+            return self._nested_sched().rng_for_group(step)  # frozen per group
+        return DependentRNG(cfg.seed, cfg.effective_kappa, step)
+
+    def rng_state(self, step) -> RNGState:
+        """Traceable RNG state — ``step`` may be a traced int32 scalar, so
+        a single compiled train step covers the whole κ schedule."""
+        cfg = self.config
+        if cfg.schedule == "nested":
+            # traced mirror of NestedSchedule.rng_for_group(step).state —
+            # pinned together by test_rng_state_matches_host_schedule
+            base = jnp.uint32(cfg.seed & 0xFFFFFFFF)
+            w = (jnp.asarray(step, jnp.int32) // cfg.kappa).astype(jnp.uint32)
+            return RNGState(base + w, base + w, jnp.float32(0.0))
+        return DependentRNG(cfg.seed, cfg.effective_kappa).state_at(step)
+
+    # ------------------------------------------------------------------
+    # Seed batches (host-side)
+    # ------------------------------------------------------------------
+    def _seed_pool(self) -> np.ndarray:
+        if self.dataset is not None:
+            return np.asarray(self.dataset.train_ids)
+        return np.arange(self.graph.num_vertices, dtype=np.int32)
+
+    @cached_property
+    def _owned_pools(self) -> list[np.ndarray]:
+        # cached: the owner transfer + per-PE scans are O(V + P*|pool|),
+        # too expensive to redo every training step
+        pool = self._seed_pool()
+        owner = np.asarray(self.part.owner)
+        return [pool[owner[pool] == p] for p in range(self.config.num_pes)]
+
+    def seed_batch(self, step: int) -> np.ndarray:
+        """(P, b) int32 seed rows for ``step`` (INVALID-padded short rows).
+
+        Independent: P draws from the global pool.  Cooperative: row p
+        holds only vertices PE p owns — the union is the global batch.
+        Nested schedules carve b-sized sub-batches out of a κ·b group
+        batch that is redrawn every κ steps (§3.2).
+        """
+        cfg = self.config
+        P, b = cfg.num_pes, cfg.local_batch
+        if cfg.schedule == "nested":
+            return self._nested_seed_batch(step)
+        out = np.full((P, b), np.int32(INVALID), np.int32)
+        if cfg.mode == "cooperative":
+            pools = self._owned_pools
+            for p in range(P):
+                g = np.random.default_rng(cfg.seed + step * 131 + p)
+                n = min(b, len(pools[p]))
+                out[p, :n] = g.choice(pools[p], size=n, replace=False)
+        else:
+            pool = self._seed_pool()
+            g = np.random.default_rng(cfg.seed + step)
+            sel = g.choice(len(pool), size=(P, b), replace=False)
+            out[:] = pool[sel].astype(np.int32)
+        return out
+
+    def _nested_seed_batch(self, step: int) -> np.ndarray:
+        cfg = self.config
+        P, b, k = cfg.num_pes, cfg.local_batch, cfg.kappa
+        sched = self._nested_sched()
+        g = sched.group_index(step)
+        pools = (
+            self._owned_pools
+            if cfg.mode == "cooperative"
+            else [self._seed_pool()] * P
+        )
+        out = np.full((P, b), np.int32(INVALID), np.int32)
+        for p in range(P):
+            rng = np.random.default_rng(cfg.seed + 977 * g + p)
+            n = min(k * b, len(pools[p]))
+            group_ids = rng.choice(pools[p], size=n, replace=False)
+            sub = sched.sub_batch(step, group_ids)
+            out[p, : len(sub)] = sub.astype(np.int32)
+        return out
+
+    # ------------------------------------------------------------------
+    # Plan construction
+    # ------------------------------------------------------------------
+    def build_plan(self, seeds, rng=None, step: int = 0) -> Plan:
+        """Sample an L-layer plan from a seed frontier.
+
+        ``seeds``: 1-D ``(b,)`` for a single independent plan (bit-equal
+        to ``build_minibatch``) or stacked ``(P, b)`` for per-PE plans.
+        ``rng`` defaults to the schedule's RNG at ``step``; pass a traced
+        :class:`RNGState` from inside a jitted step to avoid retraces.
+        """
+        if rng is None:
+            rng = self.rng_at(step)
+        seeds = jnp.asarray(seeds, jnp.int32)
+        cfg = self.config
+        if cfg.mode == "cooperative":
+            return build_cooperative_minibatch(
+                self.graph, self.sampler, self.part, seeds, rng,
+                cfg.num_layers, self.caps, self.ex,
+            )
+        if seeds.ndim == 1:
+            return build_minibatch(
+                self.graph, self.sampler, seeds, rng, cfg.num_layers, self.caps
+            )
+        build_one = lambda s: build_minibatch(
+            self.graph, self.sampler, s, rng, cfg.num_layers, self.caps
+        )
+        return jax.vmap(build_one)(seeds)
+
+    # ------------------------------------------------------------------
+    # Model application — the one remaining mode dispatch
+    # ------------------------------------------------------------------
+    def apply_model(self, params, gnn_cfg, plan: Plan, H: jax.Array) -> jax.Array:
+        """Seed logits from input embeddings ``H = plan.gather_inputs(...)``.
+
+        Independent: per-PE bipartite compute (vmapped when stacked).
+        Cooperative: Alg. 1 forward — all-to-all redistribution between
+        layers; the backward all-to-alls fall out of AD.
+        """
+        from repro.models.gnn import gnn_apply, gnn_apply_cooperative
+
+        if isinstance(plan, CoopMinibatch):
+            return gnn_apply_cooperative(
+                params, gnn_cfg, self.ex, plan.layers, H, self.caps.tilde_caps
+            )
+        if plan.input_ids.ndim > 1:  # stacked (P, ...) independent plans
+            return jax.vmap(
+                lambda layers, h: gnn_apply(params, gnn_cfg, layers, h)
+            )(plan.layers, H)
+        return gnn_apply(params, gnn_cfg, plan.layers, H)
+
+    # ------------------------------------------------------------------
+    # Streaming
+    # ------------------------------------------------------------------
+    def stream(
+        self, num_steps: int, start_step: int = 0, prefetch: int = 2
+    ) -> MinibatchStream:
+        """Iterator over ``(plan, rng, step)`` items with host-side
+        double-buffered prefetch (see :class:`MinibatchStream`)."""
+        return MinibatchStream(self, num_steps, start_step, prefetch)

@@ -1,0 +1,37 @@
+"""The common ``Plan`` protocol both minibatch flavors satisfy.
+
+A *plan* is the static-shape output of sampling: L bipartite layer
+blocks, the input frontier whose features must load, and the seed
+frontier whose labels are supervised.  ``Minibatch`` (independent, §2.3)
+and ``CoopMinibatch`` (cooperative, §3.1) both satisfy this protocol, so
+training loops, examples, and benchmarks can consume either without
+mode branches — the engine owns the only mode dispatch (model apply).
+"""
+from __future__ import annotations
+
+from typing import Protocol, Sequence, runtime_checkable
+
+import jax
+
+
+@runtime_checkable
+class Plan(Protocol):
+    """Uniform surface of a sampled L-layer minibatch plan."""
+
+    layers: Sequence          # per-layer bipartite blocks (mode-specific)
+    input_ids: jax.Array      # deepest frontier S^L — rows to fetch
+    seed_ids: jax.Array       # seed frontier S^0 — rows to supervise
+
+    def gather_inputs(self, store) -> jax.Array:
+        """Load input-layer embeddings from a ``FeatureStore``-like object
+        (anything with ``gather(ids) -> (..., d)`` masking INVALID rows)."""
+        ...
+
+    def stats(self) -> dict:
+        """Vertex/edge/communication counts (Fig 3 / Table 7 quantities).
+
+        Common keys: ``S{l}``, ``E{l}``, ``comm{l+1}``, ``inputs``.
+        Cooperative plans add ``tilde{l+1}`` (request frontier sizes).
+        Stacked plans report per-PE maxima.
+        """
+        ...

@@ -137,6 +137,28 @@ def _build_symbols(txt: str) -> dict[str, tuple[str, list[int], int]]:
     return table
 
 
+def _split_top_level(inner: str) -> list[str]:
+    """Split an operand list on commas OUTSIDE (), [], {}.
+
+    Optimized-HLO operands carry inline types — ``f32[64,64]{1,0} %x`` —
+    whose shape/layout commas must not split the list.
+    """
+    parts, cur, depth = [], [], 0
+    for ch in inner:
+        if ch in "([{":
+            depth += 1
+        elif ch in ")]}":
+            depth -= 1
+        if ch == "," and depth == 0:
+            parts.append("".join(cur))
+            cur = []
+        else:
+            cur.append(ch)
+    if cur:
+        parts.append("".join(cur))
+    return parts
+
+
 def _operand_names(rhs: str, start: int | None = None) -> list[str]:
     """Names inside the op's call parens.
 
@@ -158,9 +180,11 @@ def _operand_names(rhs: str, start: int | None = None) -> list[str]:
                 break
     inner = rhs[start + 1 : end]
     names = []
-    for tok in inner.split(","):
-        tok = tok.strip()
-        m = re.match(r"%?([\w.\-]+)$", tok)
+    for tok in _split_top_level(inner):
+        # the name is the trailing token; a leading inline type is optional
+        m = re.search(r"%([\w.\-]+)\s*$", tok) or re.match(
+            r"\s*([a-zA-Z_][\w.\-]*)\s*$", tok
+        )
         if m:
             names.append(m.group(1))
     return names

@@ -1,14 +1,18 @@
-"""GNN training drivers: independent vs cooperative minibatching.
+"""GNN training driver over the unified :class:`MinibatchEngine`.
 
-Both drivers run the *same* model code and the same global batch size;
-they differ only in how the minibatch plan is built and how embeddings
-are provided — exactly the paper's controlled comparison (§4.3, Fig. 9).
+Both minibatching modes run the *same* model code, the same loss path,
+and the same global batch size — exactly the paper's controlled
+comparison (§4.3, Fig. 9).  The mode lives entirely inside the engine:
 
 * independent: P PEs × local batch b, P separate plans (vmap-stacked),
   gradients averaged across PEs (the standard data-parallel all-reduce).
 * cooperative: ONE global batch of size b·P partitioned by ownership,
   all-to-all exchanges during sampling + F/B (Alg. 1), gradients
   averaged across PEs.
+
+The training step below never branches on the mode: it builds a plan,
+gathers input features through it, applies the model through the
+engine, and supervises the seed frontier.
 """
 from __future__ import annotations
 
@@ -21,18 +25,9 @@ import jax.numpy as jnp
 import numpy as np
 
 from repro.core import frontier
-from repro.core.cooperative import (
-    CoopCapacityPlan,
-    SimExecutor,
-    build_cooperative_minibatch,
-    redistribute,
-)
-from repro.core.dependent import DependentSchedule
 from repro.core.graph import INVALID
-from repro.core.minibatch import CapacityPlan, build_minibatch
-from repro.core.partition import Partition, make_partition
-from repro.core.samplers.base import make_sampler
-from repro.models.gnn import GNNConfig, gnn_apply, gnn_apply_cooperative, init_gnn
+from repro.engine import EngineConfig, MinibatchEngine
+from repro.models.gnn import GNNConfig, init_gnn
 from repro.train.metrics import masked_softmax_xent, micro_f1
 from repro.train.optim import adam_init, adam_update
 
@@ -46,10 +41,19 @@ class TrainConfig:
     lr: float = 1e-3
     sampler: str = "labor0"
     fanout: int = 10
+    schedule: str = "smoothed"       # iid | smoothed | nested
     kappa: Optional[int] = 1         # dependent-minibatching window
     partition: str = "hash"
     seed: int = 0
     eval_every: int = 25
+
+    def engine_config(self, num_layers: int) -> EngineConfig:
+        return EngineConfig(
+            mode=self.mode, num_pes=self.num_pes, local_batch=self.local_batch,
+            num_layers=num_layers, sampler=self.sampler, fanout=self.fanout,
+            schedule=self.schedule, kappa=self.kappa, partition=self.partition,
+            seed=self.seed,
+        )
 
 
 @dataclass
@@ -59,87 +63,27 @@ class TrainResult:
     val_f1: list = field(default_factory=list)
 
 
-def _owned_train_ids(dataset, part: Partition, num_pes: int) -> list[np.ndarray]:
-    owner = np.asarray(part.owner)
-    return [dataset.train_ids[owner[dataset.train_ids] == p] for p in range(num_pes)]
-
-
-def _seed_batches_independent(dataset, step, P, b, seed):
-    """P independent local batches (P, b) from the global training set."""
-    g = np.random.default_rng(seed + step)
-    sel = g.choice(len(dataset.train_ids), size=(P, b), replace=False)
-    return dataset.train_ids[sel].astype(np.int32)
-
-
-def _seed_batches_cooperative(owned_ids, step, P, b, seed):
-    """Per-PE owned seed batches (P, b) — union is the global batch."""
-    out = np.full((P, b), np.int32(INVALID), np.int32)
-    for p in range(P):
-        g = np.random.default_rng(seed + step * 131 + p)
-        n = min(b, len(owned_ids[p]))
-        out[p, :n] = g.choice(owned_ids[p], size=n, replace=False)
-    return out
-
-
 def train_gnn(dataset, gnn_cfg: GNNConfig, tc: TrainConfig) -> TrainResult:
-    graph = dataset.graph
-    P, b, L = tc.num_pes, tc.local_batch, gnn_cfg.num_layers
-    sampler = make_sampler(tc.sampler, fanout=tc.fanout)
-    sched = DependentSchedule(base_seed=tc.seed, kappa=tc.kappa)
-    features, labels = dataset.features, dataset.labels
-    V = graph.num_vertices
+    engine = MinibatchEngine.from_config(
+        dataset.graph, tc.engine_config(gnn_cfg.num_layers), dataset=dataset
+    )
+    store, labels = engine.store, dataset.labels
+    V = dataset.graph.num_vertices
 
     params = init_gnn(jax.random.PRNGKey(tc.seed), gnn_cfg)
     opt = adam_init(params)
 
-    if tc.mode == "cooperative":
-        part = make_partition(tc.partition, graph, P, seed=tc.seed)
-        owned = _owned_train_ids(dataset, part, P)
-        caps = CoopCapacityPlan.geometric(b, L, tc.fanout, V, P)
-        ex = SimExecutor(P)
-
-        def loss_fn(params, seeds, step):
-            rng = sched.rng_at(0).state_at(step)  # dynamic smoothed-RNG state
-            mb = build_cooperative_minibatch(
-                graph, sampler, part, seeds, rng, L, caps, ex
-            )
-
-            def load(ids):
-                h = features[jnp.clip(ids, 0, V - 1)]
-                return jnp.where((ids != INVALID)[:, None], h, 0.0)
-
-            H = ex.pe(load, mb.input_ids)  # (P, capL, d)
-            logits = gnn_apply_cooperative(
-                params, gnn_cfg, ex, mb.layers, H, caps.tilde_caps
-            )  # (P, cap0, C)
-            seed_ids = mb.seed_ids
-            y = labels[jnp.clip(seed_ids, 0, V - 1)]
-            valid = seed_ids != INVALID
-            return masked_softmax_xent(
-                logits.reshape(-1, logits.shape[-1]),
-                y.reshape(-1),
-                valid.reshape(-1),
-            )
-
-        batch_fn = lambda step: _seed_batches_cooperative(owned, step, P, b, tc.seed)
-    else:
-        caps = CapacityPlan.geometric(b, L, tc.fanout, V)
-
-        def loss_fn(params, seeds, step):
-            rng = sched.rng_at(0).state_at(step)  # dynamic smoothed-RNG state
-
-            def one_pe(seeds_p):
-                mb = build_minibatch(graph, sampler, seeds_p, rng, L, caps)
-                h = features[jnp.clip(mb.input_ids, 0, V - 1)]
-                h = jnp.where((mb.input_ids != INVALID)[:, None], h, 0.0)
-                logits = gnn_apply(params, gnn_cfg, mb.layers, h)
-                y = labels[jnp.clip(mb.seed_ids, 0, V - 1)]
-                valid = mb.seed_ids != INVALID
-                return masked_softmax_xent(logits, y, valid)
-
-            return jnp.mean(jax.vmap(one_pe)(seeds))
-
-        batch_fn = lambda step: _seed_batches_independent(dataset, step, P, b, tc.seed)
+    def loss_fn(params, seeds, step):
+        # single mode-agnostic path: plan -> features -> logits -> xent
+        rng = engine.rng_state(step)  # dynamic smoothed-RNG state
+        plan = engine.build_plan(seeds, rng=rng)
+        H = plan.gather_inputs(store)
+        logits = engine.apply_model(params, gnn_cfg, plan, H)
+        y = labels[jnp.clip(plan.seed_ids, 0, V - 1)]
+        valid = plan.seed_ids != INVALID
+        return masked_softmax_xent(
+            logits.reshape(-1, logits.shape[-1]), y.reshape(-1), valid.reshape(-1)
+        )
 
     @partial(jax.jit, static_argnums=())
     def train_step(params, opt, seeds, step):
@@ -149,7 +93,7 @@ def train_gnn(dataset, gnn_cfg: GNNConfig, tc: TrainConfig) -> TrainResult:
 
     result = TrainResult(params=params)
     for step in range(tc.num_steps):
-        seeds = jnp.asarray(batch_fn(step))
+        seeds = jnp.asarray(engine.seed_batch(step))
         # `step` is a dynamic arg: the smoothed-RNG state (z1, z2, c) is
         # computed inside the compiled step, so one trace serves the whole
         # kappa schedule.
@@ -166,13 +110,16 @@ def evaluate(
     max_batches: int = 4,
 ) -> float:
     """Micro-F1 with (independent) sampled neighborhoods — Fig. 4 style."""
-    graph = dataset.graph
-    V = graph.num_vertices
-    sampler = make_sampler(tc.sampler, fanout=tc.fanout)
-    caps = CapacityPlan.geometric(tc.local_batch, gnn_cfg.num_layers, tc.fanout, V)
+    eval_engine = MinibatchEngine.from_config(
+        dataset.graph,
+        EngineConfig(
+            mode="independent", num_pes=1, local_batch=tc.local_batch,
+            num_layers=gnn_cfg.num_layers, sampler=tc.sampler,
+            fanout=tc.fanout, schedule="iid", seed=tc.seed + 999,
+        ),
+        dataset=dataset,
+    )
     ids_all = {"val": dataset.val_ids, "test": dataset.test_ids}[split]
-    from repro.core.rng import DependentRNG
-
     preds, ys = [], []
     for i in range(max_batches):
         lo = i * tc.local_batch
@@ -180,14 +127,12 @@ def evaluate(
         if len(ids) == 0:
             break
         seeds = frontier.pad_to(jnp.asarray(ids, jnp.int32), tc.local_batch)
-        rng = DependentRNG(base_seed=tc.seed + 999, kappa=1, step=i)
-        mb = build_minibatch(graph, sampler, seeds, rng, gnn_cfg.num_layers, caps)
-        h = dataset.features[jnp.clip(mb.input_ids, 0, V - 1)]
-        h = jnp.where((mb.input_ids != INVALID)[:, None], h, 0.0)
-        logits = gnn_apply(params, gnn_cfg, mb.layers, h)
-        valid = np.asarray(mb.seed_ids) != INVALID
+        plan = eval_engine.build_plan(seeds, step=i)  # iid schedule @ seed+999
+        h = plan.gather_inputs(eval_engine.store)
+        logits = eval_engine.apply_model(params, gnn_cfg, plan, h)
+        valid = np.asarray(plan.seed_ids) != INVALID
         pred = np.asarray(jnp.argmax(logits, -1))[valid]
-        y = np.asarray(dataset.labels)[np.asarray(mb.seed_ids)[valid]]
+        y = np.asarray(dataset.labels)[np.asarray(plan.seed_ids)[valid]]
         preds.append(pred)
         ys.append(y)
     return micro_f1(np.concatenate(preds), np.concatenate(ys))

@@ -1,0 +1,174 @@
+"""MinibatchEngine facade: parity with the kernel-layer builders.
+
+The engine must be a *wiring* layer, not a reimplementation: independent
+plans must equal ``build_minibatch`` bit-for-bit, cooperative plan stats
+must match ``build_cooperative_minibatch`` under ``SimExecutor``, and
+streams must be deterministic functions of the config.
+"""
+import jax.numpy as jnp
+import numpy as np
+import pytest
+
+from repro.core.cooperative import (
+    CoopCapacityPlan,
+    CoopMinibatch,
+    SimExecutor,
+    build_cooperative_minibatch,
+    plan_stats,
+)
+from repro.core.graph import INVALID
+from repro.core.minibatch import CapacityPlan, Minibatch, build_minibatch
+from repro.core.partition import make_partition
+from repro.core.rng import DependentRNG
+from repro.core.samplers import make_sampler
+from repro.engine import EngineConfig, MinibatchEngine, Plan
+
+L, B, FANOUT = 2, 32, 5
+
+
+def _engine(graph, **kw):
+    defaults = dict(
+        mode="independent", num_pes=2, local_batch=B, num_layers=L,
+        sampler="labor0", fanout=FANOUT, seed=3,
+    )
+    defaults.update(kw)
+    return MinibatchEngine.from_config(graph, EngineConfig(**defaults))
+
+
+def _assert_minibatch_equal(a: Minibatch, b: Minibatch):
+    np.testing.assert_array_equal(np.asarray(a.input_ids), np.asarray(b.input_ids))
+    np.testing.assert_array_equal(np.asarray(a.seed_ids), np.asarray(b.seed_ids))
+    for la, lb in zip(a.layers, b.layers):
+        for f in ("seeds", "self_idx", "nbr_idx", "mask"):
+            np.testing.assert_array_equal(
+                np.asarray(getattr(la, f)), np.asarray(getattr(lb, f)), err_msg=f
+            )
+
+
+def test_plans_satisfy_protocol(small_graph):
+    eng = _engine(small_graph)
+    plan = eng.build_plan(eng.seed_batch(0))
+    assert isinstance(plan, Plan)
+    ceng = _engine(small_graph, mode="cooperative", num_pes=4)
+    cplan = ceng.build_plan(ceng.seed_batch(0))
+    assert isinstance(cplan, Plan)
+    assert isinstance(cplan, CoopMinibatch)
+
+
+def test_independent_engine_matches_build_minibatch(small_graph):
+    """1-D seeds: the engine IS build_minibatch, bit for bit."""
+    eng = _engine(small_graph, num_pes=1)
+    seeds = eng.seed_batch(0)[0]
+    plan = eng.build_plan(seeds, step=0)
+    caps = CapacityPlan.geometric(B, L, FANOUT, small_graph.num_vertices)
+    ref = build_minibatch(
+        small_graph, make_sampler("labor0", fanout=FANOUT),
+        jnp.asarray(seeds, jnp.int32), DependentRNG(3, 1, 0), L, caps,
+    )
+    _assert_minibatch_equal(plan, ref)
+
+
+def test_independent_stacked_rows_match_solo_builds(small_graph):
+    """(P, b) seeds: every vmapped row equals its standalone build."""
+    eng = _engine(small_graph, num_pes=3)
+    seeds = eng.seed_batch(5)
+    plan = eng.build_plan(seeds, step=5)
+    caps = CapacityPlan.geometric(B, L, FANOUT, small_graph.num_vertices)
+    sampler = make_sampler("labor0", fanout=FANOUT)
+    for p in range(3):
+        ref = build_minibatch(
+            small_graph, sampler, jnp.asarray(seeds[p], jnp.int32),
+            DependentRNG(3, 1, 5), L, caps,
+        )
+        np.testing.assert_array_equal(np.asarray(plan.input_ids)[p],
+                                      np.asarray(ref.input_ids))
+        np.testing.assert_array_equal(np.asarray(plan.seed_ids)[p],
+                                      np.asarray(ref.seed_ids))
+        for la, lb in zip(plan.layers, ref.layers):
+            for f in ("seeds", "self_idx", "nbr_idx", "mask"):
+                np.testing.assert_array_equal(
+                    np.asarray(getattr(la, f))[p], np.asarray(getattr(lb, f)),
+                    err_msg=f"PE {p} field {f}",
+                )
+
+
+@pytest.mark.parametrize("P", [1, 4])
+def test_cooperative_engine_matches_direct_builder(small_graph, P):
+    """Engine cooperative plan_stats == direct builder under SimExecutor."""
+    eng = _engine(small_graph, mode="cooperative", num_pes=P)
+    seeds = eng.seed_batch(0)
+    stats = eng.build_plan(seeds, step=0).stats()
+
+    caps = CoopCapacityPlan.geometric(B, L, FANOUT, small_graph.num_vertices, P)
+    part = make_partition("hash", small_graph, P, seed=3)
+    ex = SimExecutor(P)
+    ref = build_cooperative_minibatch(
+        small_graph, make_sampler("labor0", fanout=FANOUT), part,
+        jnp.asarray(seeds), DependentRNG(3, 1, 0), L, caps, ex,
+    )
+    assert stats == plan_stats(ref, ex)
+
+
+def test_cooperative_seed_rows_are_owned(small_graph):
+    eng = _engine(small_graph, mode="cooperative", num_pes=4)
+    owner = np.asarray(eng.part.owner)
+    seeds = eng.seed_batch(7)
+    for p in range(4):
+        valid = seeds[p][seeds[p] != np.int32(INVALID)]
+        assert (owner[valid] == p).all()
+
+
+def test_smoothed_stream_determinism(small_graph):
+    """Same config => identical (seeds, rng, input_ids) at every step."""
+    mk = lambda: _engine(
+        small_graph, num_pes=2, schedule="smoothed", kappa=4, seed=13
+    ).stream(num_steps=6)
+    a, b = list(mk()), list(mk())
+    assert [x.step for x in a] == list(range(6))
+    for ia, ib in zip(a, b):
+        assert ia.rng == DependentRNG(13, 4, ia.step)
+        np.testing.assert_array_equal(ia.seeds, ib.seeds)
+        np.testing.assert_array_equal(
+            np.asarray(ia.plan.input_ids), np.asarray(ib.plan.input_ids)
+        )
+
+
+def test_smoothed_stream_drifts_within_window(small_graph):
+    """Consecutive in-window plans overlap more than cross-window plans
+    (the locality that drives Fig 5a)."""
+    eng = _engine(
+        small_graph, num_pes=1, schedule="smoothed", kappa=64, seed=0
+    )
+    seeds = eng.seed_batch(0)[0]
+    ids0 = np.asarray(eng.build_plan(seeds, step=0).input_ids)
+    ids1 = np.asarray(eng.build_plan(seeds, step=1).input_ids)  # same window
+    eng_iid = _engine(small_graph, num_pes=1, schedule="iid", seed=0)
+    ids_far = np.asarray(eng_iid.build_plan(seeds, step=1).input_ids)
+    j = lambda x, y: len(np.intersect1d(x[x != INVALID], y[y != INVALID])) / max(
+        len(np.union1d(x[x != INVALID], y[y != INVALID])), 1
+    )
+    assert j(ids0, ids1) > j(ids0, ids_far)
+
+
+def test_rng_state_matches_host_schedule(small_graph):
+    """Traced rng_state(step) == host rng_at(step).state for all schedules."""
+    for schedule, kappa in (("iid", None), ("smoothed", 8), ("nested", 4)):
+        eng = _engine(small_graph, schedule=schedule, kappa=kappa or 1)
+        for step in (0, 3, 9):
+            traced = eng.rng_state(jnp.int32(step))
+            host = eng.rng_at(step).state
+            assert int(traced.z1) == int(host.z1), (schedule, step)
+            assert int(traced.z2) == int(host.z2), (schedule, step)
+            assert float(traced.c) == pytest.approx(float(host.c)), (schedule, step)
+
+
+def test_nested_subbatches_partition_group(small_graph):
+    """Within one group, the κ sub-batches are disjoint; the group pool
+    (and its frozen RNG) is shared — §3.2 nesting."""
+    eng = _engine(small_graph, num_pes=1, schedule="nested", kappa=3, seed=5)
+    rows = [eng.seed_batch(s)[0] for s in range(3)]
+    valid = [r[r != np.int32(INVALID)] for r in rows]
+    allv = np.concatenate(valid)
+    assert len(np.unique(allv)) == len(allv)  # disjoint within the group
+    assert eng.rng_at(0) == eng.rng_at(2)     # frozen group RNG
+    assert eng.rng_at(0) != eng.rng_at(3)     # refreshed next group

@@ -1,7 +1,7 @@
 """Padded set-ops: property-based (hypothesis) + unit tests."""
 import jax.numpy as jnp
 import numpy as np
-from hypothesis import given, settings, strategies as st
+from _hypothesis_compat import given, settings, strategies as st
 
 from repro.core import frontier
 from repro.core.graph import INVALID
