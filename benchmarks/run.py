@@ -14,6 +14,8 @@ Sections:
 from __future__ import annotations
 
 import argparse
+import json
+import os
 import sys
 import time
 
@@ -22,11 +24,49 @@ def _section(name):
     print(f"\n### {name}", flush=True)
 
 
+def run_analysis_gate(out_path="BENCH_analysis.json"):
+    """Run the static analyzer over src/ and persist rule counts + wall time.
+
+    Runs first so a benchmark snapshot is never recorded against a tree
+    the invariant checker rejects.
+    """
+    from repro.analysis import Severity, run_analysis
+
+    repo = os.path.dirname(os.path.dirname(os.path.abspath(__file__)))
+    report = run_analysis([os.path.join(repo, "src")])
+    payload = {
+        "rule_counts": report.rule_counts(),
+        "files_scanned": report.files_scanned,
+        "passes_run": list(report.passes_run),
+        "wall_s": round(report.wall_s, 3),
+        "errors": report.count_at_least(Severity.ERROR),
+        "warnings": report.count_at_least(Severity.WARNING),
+    }
+    with open(out_path, "w") as f:
+        json.dump(payload, f, indent=2, sort_keys=True)
+    print(f"# analysis: {payload['errors']} errors, "
+          f"{payload['warnings']} warnings in {payload['wall_s']}s "
+          f"-> {out_path}", flush=True)
+    if payload["errors"]:
+        for fi in report.findings:
+            if fi.severity >= Severity.ERROR:
+                print(fi.render(), file=sys.stderr)
+        raise SystemExit("repro.analysis found errors; fix before benchmarking")
+
+
 def main() -> None:
     ap = argparse.ArgumentParser()
     ap.add_argument("--only", default=None)
     ap.add_argument("--fast", action="store_true")
+    ap.add_argument("--skip-analysis", action="store_true",
+                    help="skip the static-analysis gate / BENCH_analysis.json")
     args = ap.parse_args()
+
+    if not args.skip_analysis:
+        _section("analysis")
+        t0 = time.time()
+        run_analysis_gate()
+        print(f"# analysis done in {time.time()-t0:.1f}s", flush=True)
 
     sections = {}
 

@@ -1,0 +1,24 @@
+"""Static invariant checker for plans, Pallas kernels, and trace hygiene.
+
+Three passes, one CLI (``python -m repro.analysis``):
+
+* **lint** (RA0xx, :mod:`repro.analysis.rules`) — AST rules enforcing
+  the repo's hot-path contracts: no host sync or numpy inside
+  jit/stream scopes, no PRNG key reuse, no Python branching on traced
+  values, typed kernel preconditions.
+* **contracts** (RA1xx, :mod:`repro.analysis.contracts`) — verifies
+  every ``pl.pallas_call`` site's BlockSpec divisibility, index-map
+  arity/rank, grid coverage, accumulation-init coverage, and VMEM
+  footprint without executing a kernel on device.
+* **trace** (RA2xx, :mod:`repro.analysis.trace`) — runs the jit entry
+  points on tiny shapes and reports silent recompilations and implicit
+  host transfers.
+
+Findings carry stable rule ids and ``file:line`` anchors; severity
+gates the exit code.  See README "Static analysis" for the catalog and
+inline suppression syntax.
+"""
+from repro.analysis.cli import main, run_analysis
+from repro.analysis.findings import Finding, Report, Severity
+
+__all__ = ["main", "run_analysis", "Finding", "Report", "Severity"]

@@ -1,0 +1,559 @@
+"""Kernel contract checker: verify ``pl.pallas_call`` sites statically.
+
+Strategy: monkeypatch ``jax.experimental.pallas.pallas_call`` with a
+recording stub and invoke each registered kernel wrapper under
+``jax.disable_jit()`` on representative (production block size) shapes.
+The kernel body never runs and nothing compiles or touches a device —
+the stub receives the *actual* grid / BlockSpecs / operands the wrapper
+constructs and checks, per call site:
+
+* RA101 block divisibility — every ``block_shape[k]`` divides the
+  operand's ``shape[k]``;
+* RA102 index-map arity — each BlockSpec ``index_map`` takes exactly
+  ``len(grid)`` arguments;
+* RA103 index-map rank — the index map returns one coordinate per
+  block dimension;
+* RA104 grid coverage — enumerating the grid, the output index map
+  hits every output tile;
+* RA105 init coverage — if an output tile is revisited across grid
+  steps (its index map ignores a grid axis) the kernel body must guard
+  a first-visit initialization with ``pl.when(... == 0)``;
+* RA106 VMEM budget — 2x double-buffered input tiles + output tile
+  must fit the configured budget (default 16 MiB);
+* RA107 typed preconditions — calling the wrapper with contract-
+  violating shapes must raise :class:`KernelContractError`, not a bare
+  ``AssertionError`` or nothing.
+
+Fixture / third-party modules are supported via a module-level
+``ANALYSIS_TARGETS = [{"fn": ..., "args": ..., "bad_args": [...]}]``
+declaration — the checker picks those up for any ``.py`` file passed on
+the command line.
+"""
+from __future__ import annotations
+
+import ast
+import functools
+import importlib
+import importlib.util
+import inspect
+import itertools
+import math
+import os
+import textwrap
+import traceback
+from dataclasses import dataclass, field
+from typing import Callable, Iterable, List, Optional
+
+from repro.analysis.findings import Finding, Severity
+
+DEFAULT_VMEM_BUDGET = 16 * 1024 * 1024  # v5e per-core VMEM
+_MAX_GRID_ENUM = 65536
+
+
+@dataclass
+class KernelTarget:
+    """One kernel wrapper to verify."""
+
+    name: str
+    module: str                      # import path ("repro.kernels...") or file
+    fn: str
+    make_args: Callable              # () -> (args tuple, kwargs dict)
+    bad_args: list = field(default_factory=list)  # callables, same shape
+
+
+def repo_targets() -> List[KernelTarget]:
+    """The three shipped Pallas kernels, at production block sizes."""
+    import jax.numpy as jnp
+
+    def gather_args():
+        table = jnp.zeros((4096, 128), jnp.float32)
+        ids = jnp.zeros((512,), jnp.int32)
+        return (table, ids), dict(block_n=512, block_d=128, page=2048)
+
+    def gather_bad():
+        table = jnp.zeros((4000, 128), jnp.float32)  # 4000 % 2048 != 0
+        ids = jnp.zeros((512,), jnp.int32)
+        return (table, ids), dict(block_n=512, block_d=128, page=2048)
+
+    def spmm_args():
+        src = jnp.zeros((8192, 128), jnp.float32)
+        idx = jnp.zeros((128, 16), jnp.int32)
+        mask = jnp.ones((128, 16), bool)
+        return (src, idx, mask), dict(block_n=128, block_d=128)
+
+    def spmm_bad():
+        src = jnp.zeros((8192, 100), jnp.float32)  # 100 % 128 != 0
+        idx = jnp.zeros((128, 16), jnp.int32)
+        mask = jnp.ones((128, 16), bool)
+        return (src, idx, mask), dict(block_n=128, block_d=128)
+
+    def seg_args():
+        e = jnp.zeros((512, 16), jnp.float32)
+        mask = jnp.ones((512, 16), bool)
+        return (e, mask), dict(block_n=256)
+
+    def seg_bad():
+        e = jnp.zeros((500, 16), jnp.float32)  # 500 % 256 != 0
+        mask = jnp.ones((500, 16), bool)
+        return (e, mask), dict(block_n=256)
+
+    return [
+        KernelTarget(
+            "gather", "repro.kernels.gather.kernel", "paged_gather_pallas",
+            gather_args, [gather_bad],
+        ),
+        KernelTarget(
+            "spmm", "repro.kernels.spmm.kernel", "spmm_pallas",
+            spmm_args, [spmm_bad],
+        ),
+        KernelTarget(
+            "seg_softmax", "repro.kernels.seg_softmax.kernel",
+            "seg_softmax_pallas", seg_args, [seg_bad],
+        ),
+    ]
+
+
+# --- pallas_call interception ----------------------------------------------
+
+@dataclass
+class _CallSite:
+    kernel_fn: Callable
+    grid: tuple
+    in_specs: list
+    out_specs: object
+    out_shape: object
+    operands: tuple = ()
+    file: str = "<unknown>"
+    line: int = 0
+
+
+class _Recorder:
+    """Stands in for ``pl.pallas_call``; records sites, returns zeros."""
+
+    def __init__(self):
+        self.sites: List[_CallSite] = []
+
+    def __call__(self, kernel, *, grid=None, in_specs=None, out_specs=None,
+                 out_shape=None, **kwargs):
+        # anchor the finding at the pl.pallas_call( source line
+        stack = traceback.extract_stack()
+        frame = stack[-2] if len(stack) >= 2 else None
+        site = _CallSite(
+            kernel_fn=kernel,
+            grid=(grid,) if isinstance(grid, int) else tuple(grid or ()),
+            in_specs=list(in_specs or []),
+            out_specs=out_specs,
+            out_shape=out_shape,
+            file=frame.filename if frame else "<unknown>",
+            line=frame.lineno if frame else 0,
+        )
+        self.sites.append(site)
+
+        def fake(*operands):
+            import jax.numpy as jnp
+
+            site.operands = operands
+            structs = out_shape
+            single = not isinstance(structs, (tuple, list))
+            outs = [
+                jnp.zeros(s.shape, s.dtype)
+                for s in ([structs] if single else structs)
+            ]
+            return outs[0] if single else tuple(outs)
+
+        return fake
+
+
+def _block_shape(spec) -> tuple:
+    bs = getattr(spec, "block_shape", None)
+    return tuple(bs) if bs is not None else ()
+
+
+def _index_map(spec):
+    return getattr(spec, "index_map", None)
+
+
+def _normalize_coords(res) -> tuple:
+    if isinstance(res, tuple):
+        return res
+    if isinstance(res, list):
+        return tuple(res)
+    return (res,)
+
+
+def _kernel_body_has_init(kernel_fn) -> Optional[bool]:
+    """True if the kernel body guards a first-visit init via pl.when(==0).
+
+    None when the source is unavailable (builtins, exec'd code).
+    """
+    fn = kernel_fn
+    while isinstance(fn, functools.partial):
+        fn = fn.func
+    try:
+        src = textwrap.dedent(inspect.getsource(fn))
+        tree = ast.parse(src)
+    except (OSError, TypeError, SyntaxError):
+        return None
+
+    def is_when_eq0(call: ast.Call) -> bool:
+        f = call.func
+        name = f.attr if isinstance(f, ast.Attribute) else getattr(f, "id", "")
+        if name != "when":
+            return False
+        for arg in call.args:
+            for sub in ast.walk(arg):
+                if isinstance(sub, ast.Compare) and any(
+                    isinstance(op, ast.Eq) for op in sub.ops
+                ):
+                    consts = [
+                        c.value
+                        for c in ast.walk(sub)
+                        if isinstance(c, ast.Constant)
+                    ]
+                    if 0 in consts:
+                        return True
+        return False
+
+    for node in ast.walk(tree):
+        if isinstance(node, ast.Call) and is_when_eq0(node):
+            return True
+        if isinstance(node, (ast.FunctionDef, ast.AsyncFunctionDef)):
+            for dec in node.decorator_list:
+                if isinstance(dec, ast.Call) and is_when_eq0(dec):
+                    return True
+    return False
+
+
+def _kernel_body_accumulates(kernel_fn) -> bool:
+    fn = kernel_fn
+    while isinstance(fn, functools.partial):
+        fn = fn.func
+    try:
+        src = textwrap.dedent(inspect.getsource(fn))
+        tree = ast.parse(src)
+    except (OSError, TypeError, SyntaxError):
+        return False
+    return any(
+        isinstance(n, ast.AugAssign) and isinstance(n.target, ast.Subscript)
+        for n in ast.walk(tree)
+    )
+
+
+def _check_site(
+    site: _CallSite, target_name: str, vmem_budget: int
+) -> List[Finding]:
+    out: List[Finding] = []
+
+    def finding(rule, severity, message, **extra):
+        out.append(Finding(
+            rule=rule, severity=severity, message=message,
+            file=site.file, line=site.line,
+            extra=dict(kernel=target_name, **extra),
+        ))
+
+    grid = site.grid
+    n_grid = len(grid)
+    out_specs = site.out_specs
+    out_shapes = site.out_shape
+    single_out = not isinstance(out_specs, (tuple, list))
+    out_pairs = list(zip(
+        [out_specs] if single_out else list(out_specs),
+        [out_shapes] if not isinstance(out_shapes, (tuple, list))
+        else list(out_shapes),
+    ))
+
+    if len(site.in_specs) != len(site.operands):
+        finding(
+            "RA102", Severity.ERROR,
+            f"{len(site.in_specs)} in_specs for {len(site.operands)} "
+            "operands",
+        )
+        return out
+
+    # per-spec structural checks ------------------------------------------
+    all_pairs = [
+        (spec, tuple(op.shape), getattr(op.dtype, "itemsize", 4), "in", i)
+        for i, (spec, op) in enumerate(zip(site.in_specs, site.operands))
+    ] + [
+        (spec, tuple(struct.shape), struct.dtype.itemsize, "out", i)
+        for i, (spec, struct) in enumerate(out_pairs)
+    ]
+
+    vmem_in = 0
+    vmem_out = 0
+    structurally_ok = True
+    for spec, shape, itemsize, role, idx in all_pairs:
+        label = f"{role}_specs[{idx}]"
+        block = _block_shape(spec)
+        imap = _index_map(spec)
+        if imap is not None:
+            try:
+                arity = len(inspect.signature(imap).parameters)
+            except (ValueError, TypeError):
+                arity = n_grid
+            if arity != n_grid:
+                structurally_ok = False
+                finding(
+                    "RA102", Severity.ERROR,
+                    f"{label}: index_map takes {arity} args but the grid "
+                    f"has {n_grid} dimensions",
+                    arity=arity, grid=list(grid),
+                )
+                continue
+            coords = _normalize_coords(imap(*([0] * n_grid)))
+            if len(coords) != len(block):
+                structurally_ok = False
+                finding(
+                    "RA103", Severity.ERROR,
+                    f"{label}: index_map returns {len(coords)} "
+                    f"coordinate(s) for a rank-{len(block)} block "
+                    f"{block}",
+                    coords=len(coords), block=list(block),
+                )
+                continue
+        if len(block) != len(shape):
+            structurally_ok = False
+            finding(
+                "RA103", Severity.ERROR,
+                f"{label}: block {block} has rank {len(block)} but the "
+                f"operand has rank {len(shape)} (shape {shape})",
+                block=list(block), shape=list(shape),
+            )
+            continue
+        for k, (dim, b) in enumerate(zip(shape, block)):
+            if b is None:
+                continue
+            if b <= 0 or dim % b != 0:
+                finding(
+                    "RA101", Severity.ERROR,
+                    f"{label}: operand dim {k} of size {dim} is not "
+                    f"divisible by block size {b} — the trailing "
+                    "partial tile reads out of bounds (pad the operand "
+                    "or fix the BlockSpec)",
+                    dim=k, size=dim, block=b,
+                )
+        nbytes = math.prod(b for b in block if b) * itemsize
+        if role == "in":
+            vmem_in += nbytes
+        else:
+            vmem_out += nbytes
+
+    # grid coverage + init coverage ---------------------------------------
+    if structurally_ok and grid and math.prod(grid) <= _MAX_GRID_ENUM:
+        for out_idx, (spec, struct) in enumerate(out_pairs):
+            block = _block_shape(spec)
+            imap = _index_map(spec)
+            if imap is None or len(block) != len(tuple(struct.shape)):
+                continue
+            if any(b in (None, 0) or dim % b for dim, b in
+                   zip(struct.shape, block)):
+                continue
+            tiles: dict = {}
+            for g in itertools.product(*(range(s) for s in grid)):
+                c = _normalize_coords(imap(*g))
+                tiles[c] = tiles.get(c, 0) + 1
+            expected = set(itertools.product(
+                *(range(dim // b) for dim, b in zip(struct.shape, block))
+            ))
+            missing = expected - set(tiles)
+            if missing:
+                finding(
+                    "RA104", Severity.ERROR,
+                    f"out_specs[{out_idx}]: grid {tuple(grid)} never "
+                    f"writes {len(missing)} of {len(expected)} output "
+                    f"tile(s) (first missing: {sorted(missing)[0]}) — "
+                    "those tiles are returned uninitialized",
+                    missing=len(missing), expected=len(expected),
+                )
+            revisits = max(tiles.values(), default=0) > 1
+            if revisits:
+                has_init = _kernel_body_has_init(site.kernel_fn)
+                accumulates = _kernel_body_accumulates(site.kernel_fn)
+                if has_init is False and accumulates:
+                    finding(
+                        "RA105", Severity.ERROR,
+                        f"out_specs[{out_idx}]: output tile is revisited "
+                        "across grid steps and the kernel accumulates "
+                        "(`ref[...] += ...`) without a `pl.when(p == 0)` "
+                        "init branch — the first visit reads garbage "
+                        "VMEM",
+                    )
+                elif has_init is False:
+                    finding(
+                        "RA105", Severity.WARNING,
+                        f"out_specs[{out_idx}]: output tile is revisited "
+                        "across grid steps but the kernel neither "
+                        "accumulates nor initializes on first visit — "
+                        "later visits silently overwrite earlier ones",
+                    )
+
+    # VMEM budget ----------------------------------------------------------
+    est = 2 * vmem_in + vmem_out  # Pallas double-buffers inputs
+    if est > vmem_budget:
+        finding(
+            "RA106", Severity.ERROR,
+            f"estimated per-step VMEM footprint {est / 2**20:.2f} MiB "
+            f"(2x double-buffered inputs {vmem_in / 2**20:.2f} + output "
+            f"{vmem_out / 2**20:.2f}) exceeds the "
+            f"{vmem_budget / 2**20:.0f} MiB budget — shrink block sizes",
+            estimated_bytes=est, budget_bytes=vmem_budget,
+        )
+    elif not any(f.severity >= Severity.ERROR for f in out):
+        finding(
+            "RA100", Severity.INFO,
+            f"verified: grid={tuple(grid)}, "
+            f"{len(site.in_specs)} in_specs, est VMEM "
+            f"{est / 2**20:.2f} MiB / {vmem_budget / 2**20:.0f} MiB",
+            estimated_bytes=est, grid=list(grid),
+        )
+    return out
+
+
+# --- target execution ------------------------------------------------------
+
+def _load_module(target: KernelTarget):
+    if target.module.endswith(".py") or os.sep in target.module:
+        name = "_ra_fixture_" + os.path.basename(target.module)[:-3]
+        spec = importlib.util.spec_from_file_location(name, target.module)
+        mod = importlib.util.module_from_spec(spec)
+        spec.loader.exec_module(mod)
+        return mod
+    return importlib.import_module(target.module)
+
+
+def check_target(
+    target: KernelTarget, vmem_budget: int = DEFAULT_VMEM_BUDGET
+) -> List[Finding]:
+    import jax
+    from jax.experimental import pallas
+
+    findings: List[Finding] = []
+    try:
+        mod = _load_module(target)
+        fn = getattr(mod, target.fn)
+    except Exception as e:
+        return [Finding(
+            rule="RA199", severity=Severity.ERROR,
+            message=f"could not load kernel target "
+                    f"{target.module}:{target.fn}: {e!r}",
+            file=target.module,
+        )]
+    mod_file = getattr(mod, "__file__", target.module) or target.module
+
+    recorder = _Recorder()
+    real = pallas.pallas_call
+    pallas.pallas_call = recorder
+    try:
+        with jax.disable_jit():
+            args, kwargs = target.make_args()
+            try:
+                fn(*args, **kwargs)
+            except Exception as e:
+                findings.append(Finding(
+                    rule="RA199", severity=Severity.ERROR,
+                    message=f"kernel wrapper `{target.fn}` raised on its "
+                            f"reference shapes: {e!r}",
+                    file=mod_file,
+                ))
+            # typed-precondition probes
+            for i, bad in enumerate(target.bad_args):
+                bargs, bkwargs = bad()
+                try:
+                    fn(*bargs, **bkwargs)
+                except Exception as e:
+                    if type(e).__name__ != "KernelContractError":
+                        findings.append(Finding(
+                            rule="RA107", severity=Severity.ERROR,
+                            message=f"`{target.fn}` bad-shape probe #{i} "
+                                    f"raised {type(e).__name__} instead of "
+                                    "KernelContractError — preconditions "
+                                    "must be typed, not bare asserts",
+                            file=mod_file,
+                            extra=dict(raised=type(e).__name__),
+                        ))
+                else:
+                    findings.append(Finding(
+                        rule="RA107", severity=Severity.ERROR,
+                        message=f"`{target.fn}` bad-shape probe #{i} was "
+                                "accepted silently — add a "
+                                "KernelContractError precondition",
+                        file=mod_file,
+                    ))
+    finally:
+        pallas.pallas_call = real
+
+    if not recorder.sites and not any(f.rule == "RA199" for f in findings):
+        findings.append(Finding(
+            rule="RA199", severity=Severity.ERROR,
+            message=f"`{target.fn}` never reached pl.pallas_call on its "
+                    "reference shapes — nothing to verify",
+            file=mod_file,
+        ))
+    for site in recorder.sites:
+        findings.extend(_check_site(site, target.name, vmem_budget))
+    return findings
+
+
+# --- discovery over CLI paths ----------------------------------------------
+
+def _path_covers(path: str, file: str) -> bool:
+    p = os.path.abspath(path)
+    f = os.path.abspath(file)
+    return f == p or f.startswith(p.rstrip(os.sep) + os.sep)
+
+
+def fixture_targets(py_file: str) -> List[KernelTarget]:
+    """Targets declared via ``ANALYSIS_TARGETS`` in an arbitrary file."""
+    try:
+        with open(py_file, "r", encoding="utf-8") as fh:
+            if "ANALYSIS_TARGETS" not in fh.read():
+                return []
+    except OSError:
+        return []
+    name = "_ra_scan_" + os.path.basename(py_file)[:-3]
+    try:
+        spec = importlib.util.spec_from_file_location(name, py_file)
+        mod = importlib.util.module_from_spec(spec)
+        spec.loader.exec_module(mod)
+    except Exception:
+        return []
+    targets = []
+    for i, decl in enumerate(getattr(mod, "ANALYSIS_TARGETS", []) or []):
+        targets.append(KernelTarget(
+            name=f"{os.path.basename(py_file)[:-3]}:{decl['fn']}",
+            module=py_file,
+            fn=decl["fn"],
+            make_args=decl["args"],
+            bad_args=list(decl.get("bad_args", [])),
+        ))
+    return targets
+
+
+def run_contracts(
+    paths: Iterable[str], vmem_budget: int = DEFAULT_VMEM_BUDGET
+) -> List[Finding]:
+    from repro.analysis.lint import iter_python_files
+
+    findings: List[Finding] = []
+    paths = list(paths)
+
+    # repo kernels, when a path covers the kernels package
+    try:
+        import repro.kernels as _k
+
+        kdir = os.path.dirname(os.path.abspath(_k.__file__))
+    except Exception:
+        kdir = None
+    if kdir and any(
+        _path_covers(p, kdir) or _path_covers(kdir, p) for p in paths
+    ):
+        for target in repo_targets():
+            findings.extend(check_target(target, vmem_budget))
+
+    # fixture-declared targets anywhere under the given paths
+    for py in iter_python_files(paths):
+        if kdir and _path_covers(kdir, py):
+            continue  # repo kernels already covered above
+        for target in fixture_targets(py):
+            findings.extend(check_target(target, vmem_budget))
+    return findings

@@ -1,0 +1,304 @@
+"""Repo-specific lint rules (RA0xx).
+
+Rule catalog
+------------
+RA001 host-sync-in-stream   ``.item()`` / ``jax.device_get`` /
+                            ``block_until_ready`` inside a hot path.
+RA002 numpy-in-hot-path     host ``numpy`` call inside a jit-traced or
+                            streaming hot path.
+RA003 rng-key-reuse         a ``jax.random`` key consumed twice without
+                            being split/reassigned in between.
+RA004 traced-python-branch  Python ``if``/``while`` on a traced (jnp)
+                            expression inside a jit function.
+RA005 bare-assert-kernel    ``assert`` precondition in a Pallas kernel
+                            module — use KernelContractError instead.
+
+Every rule reports with a stable id so findings can be suppressed
+inline (``# ra: ignore[RA003]``) and counted across runs.
+"""
+from __future__ import annotations
+
+import ast
+from typing import Iterator, Optional
+
+from repro.analysis.findings import Finding, Severity
+from repro.analysis.lint import FileContext, LintRule
+
+#: jax.random functions that CONSUME the key passed to them — after one
+#: of these, reusing the same key correlates what must be independent.
+_KEY_CONSUMERS = frozenset({
+    "split", "fold_in", "normal", "uniform", "randint", "bernoulli",
+    "categorical", "choice", "permutation", "shuffle", "gumbel",
+    "truncated_normal", "bits", "exponential", "laplace", "poisson",
+    "dirichlet", "beta", "gamma", "cauchy", "rademacher", "ball",
+    "orthogonal", "t", "loggamma", "multivariate_normal",
+})
+
+#: functions whose result *is* a fresh key (assignment targets become keys)
+_KEY_PRODUCERS = frozenset({"PRNGKey", "key", "split", "fold_in", "clone"})
+
+_HOST_SYNC_ATTRS = frozenset({"block_until_ready"})
+_HOST_SYNC_JAX = frozenset({"jax.device_get", "jax.block_until_ready"})
+
+
+class HostSyncInHotPath(LintRule):
+    rule_id = "RA001"
+    severity = Severity.ERROR
+    title = "host-sync-in-stream"
+
+    def check(self, ctx: FileContext) -> Iterator[Finding]:
+        for node in ast.walk(ctx.tree):
+            if not isinstance(node, ast.Call) or not ctx.is_hot(node):
+                continue
+            q = ctx.qualify(node.func)
+            if q in _HOST_SYNC_JAX:
+                yield self.finding(
+                    ctx, node,
+                    f"`{q}` forces a device->host sync inside a hot path; "
+                    "it stalls the stream/step pipeline — hoist it out of "
+                    "the hot path or drop it",
+                    call=q,
+                )
+            elif isinstance(node.func, ast.Attribute):
+                if node.func.attr == "item" and not node.args:
+                    yield self.finding(
+                        ctx, node,
+                        "`.item()` blocks on device completion inside a hot "
+                        "path; keep values on device (or sync once per "
+                        "logging interval outside the hot loop)",
+                        call=".item()",
+                    )
+                elif node.func.attr in _HOST_SYNC_ATTRS:
+                    yield self.finding(
+                        ctx, node,
+                        "`.block_until_ready()` inside a hot path defeats "
+                        "async dispatch; only benchmarks should sync",
+                        call=".block_until_ready()",
+                    )
+
+
+class NumpyInHotPath(LintRule):
+    rule_id = "RA002"
+    severity = Severity.ERROR
+    title = "numpy-in-hot-path"
+
+    def check(self, ctx: FileContext) -> Iterator[Finding]:
+        for node in ast.walk(ctx.tree):
+            if not isinstance(node, ast.Call) or not ctx.is_hot(node):
+                continue
+            q = ctx.qualify(node.func)
+            if q and (q == "numpy" or q.startswith("numpy.")):
+                yield self.finding(
+                    ctx, node,
+                    f"host `{q}` call inside a jit/stream hot path: under "
+                    "trace it either bakes a constant or falls back to "
+                    "host; use the jax.numpy equivalent",
+                    call=q,
+                )
+
+
+class RngKeyReuse(LintRule):
+    rule_id = "RA003"
+    severity = Severity.ERROR
+    title = "rng-key-reuse"
+
+    def check(self, ctx: FileContext) -> Iterator[Finding]:
+        for fn in ctx.functions:
+            yield from self._check_fn(ctx, fn)
+
+    # -- helpers -----------------------------------------------------------
+
+    def _is_random_call(self, ctx: FileContext, call: ast.Call) -> Optional[str]:
+        """Returns the jax.random function name, or None."""
+        q = ctx.qualify(call.func)
+        if q and q.startswith("jax.random."):
+            return q.rsplit(".", 1)[1]
+        return None
+
+    def _check_fn(self, ctx: FileContext, fn) -> Iterator[Finding]:
+        # Ordered statement scan over this function's own body (nested
+        # defs are analyzed separately).  Straight-line approximation:
+        # exclusive if/else arms are treated as sequential, which only
+        # over-reports for code consuming the same key on both arms —
+        # rare, and suppressible inline.
+        keys: dict = {}        # name -> "live" | "consumed"
+        consumed_sub: set = set()  # (name, const_index) sub-keys consumed
+        findings = []
+
+        def key_token(expr):
+            """Bare `k` -> "k"; `ks[0]` -> ("ks", 0); else None."""
+            if isinstance(expr, ast.Name):
+                return expr.id
+            if (
+                isinstance(expr, ast.Subscript)
+                and isinstance(expr.value, ast.Name)
+                and isinstance(expr.slice, ast.Constant)
+            ):
+                return (expr.value.id, expr.slice.value)
+            return None
+
+        def handle_call(call: ast.Call):
+            name = self._is_random_call(ctx, call)
+            if name is None or name not in _KEY_CONSUMERS:
+                return
+            exprs = list(call.args) + [kw.value for kw in call.keywords]
+            for expr in exprs:
+                tok = key_token(expr)
+                if tok is None:
+                    continue
+                if isinstance(tok, tuple):  # sub-key like ks[0]
+                    if tok[0] not in keys:
+                        continue
+                    if tok in consumed_sub or keys.get(tok[0]) == "consumed":
+                        findings.append(self.finding(
+                            ctx, call,
+                            f"PRNG sub-key `{tok[0]}[{tok[1]}]` is reused "
+                            "after being consumed; split again for a "
+                            "fresh key",
+                            key=f"{tok[0]}[{tok[1]}]", consumer=name,
+                        ))
+                    else:
+                        consumed_sub.add(tok)
+                else:
+                    if keys.get(tok) == "consumed":
+                        findings.append(self.finding(
+                            ctx, call,
+                            f"PRNG key `{tok}` is reused after being "
+                            "consumed; split it first (every jax.random "
+                            "consumption must see a fresh key)",
+                            key=tok, consumer=name,
+                        ))
+                    elif tok in keys:
+                        keys[tok] = "consumed"
+
+        def mark_targets(target, producing: bool):
+            if isinstance(target, ast.Name):
+                if producing:
+                    keys[target.id] = "live"
+                    consumed_sub.difference_update(
+                        t for t in consumed_sub if t[0] == target.id
+                    )
+                else:
+                    keys.pop(target.id, None)
+            elif isinstance(target, (ast.Tuple, ast.List)):
+                for elt in target.elts:
+                    inner = elt.value if isinstance(elt, ast.Starred) else elt
+                    mark_targets(inner, producing)
+
+        def calls_in(expr):
+            for sub in ast.walk(expr):
+                if isinstance(sub, ast.Call):
+                    yield sub
+
+        def process_block(stmts):
+            for stmt in stmts:
+                if isinstance(stmt, (ast.FunctionDef, ast.AsyncFunctionDef,
+                                     ast.ClassDef)):
+                    continue  # separate scope
+                if isinstance(stmt, ast.Assign):
+                    for c in calls_in(stmt.value):
+                        handle_call(c)
+                    producing = (
+                        isinstance(stmt.value, ast.Call)
+                        and (self._is_random_call(ctx, stmt.value) or "")
+                        in _KEY_PRODUCERS
+                    )
+                    for tgt in stmt.targets:
+                        mark_targets(tgt, producing)
+                    continue
+                if isinstance(stmt, (ast.AnnAssign, ast.AugAssign)):
+                    if stmt.value is not None:
+                        for c in calls_in(stmt.value):
+                            handle_call(c)
+                    mark_targets(stmt.target, False)
+                    continue
+                # generic statement: consume calls in its expressions,
+                # then recurse into nested blocks in source order
+                for field_name in ("test", "iter", "value", "exc", "items"):
+                    sub = getattr(stmt, field_name, None)
+                    if sub is None:
+                        continue
+                    for expr in sub if isinstance(sub, list) else [sub]:
+                        node = getattr(expr, "context_expr", expr)
+                        for c in calls_in(node):
+                            handle_call(c)
+                for block_name in ("body", "orelse", "finalbody"):
+                    block = getattr(stmt, block_name, None)
+                    if isinstance(block, list):
+                        process_block(
+                            [s for s in block if isinstance(s, ast.stmt)]
+                        )
+                for handler in getattr(stmt, "handlers", []) or []:
+                    process_block(handler.body)
+
+        process_block(fn.body)
+        yield from findings
+
+
+class TracedPythonBranch(LintRule):
+    rule_id = "RA004"
+    severity = Severity.ERROR
+    title = "traced-python-branch"
+
+    def check(self, ctx: FileContext) -> Iterator[Finding]:
+        for node in ast.walk(ctx.tree):
+            if not isinstance(node, (ast.If, ast.While)) or not ctx.is_hot(node):
+                continue
+            culprit = self._traced_expr(ctx, node.test)
+            if culprit:
+                kind = "if" if isinstance(node, ast.If) else "while"
+                yield self.finding(
+                    ctx, node,
+                    f"Python `{kind}` on traced expression `{culprit}` "
+                    "inside a jit scope: branching on a traced value "
+                    "raises TracerBoolConversionError or silently "
+                    "specializes; use jnp.where / lax.cond",
+                    expr=culprit,
+                )
+
+    def _traced_expr(self, ctx: FileContext, test: ast.AST) -> Optional[str]:
+        for sub in ast.walk(test):
+            if isinstance(sub, ast.Call):
+                q = ctx.qualify(sub.func)
+                if q and (
+                    q.startswith("jax.numpy.") or q.startswith("jax.lax.")
+                ):
+                    return q
+        return None
+
+
+class BareAssertInKernel(LintRule):
+    rule_id = "RA005"
+    severity = Severity.ERROR
+    title = "bare-assert-kernel"
+
+    def _is_kernel_module(self, ctx: FileContext) -> bool:
+        for node in ast.walk(ctx.tree):
+            if isinstance(node, ast.Call):
+                q = ctx.qualify(node.func)
+                if q and q.endswith("pallas.pallas_call"):
+                    return True
+        return False
+
+    def check(self, ctx: FileContext) -> Iterator[Finding]:
+        if not self._is_kernel_module(ctx):
+            return
+        for node in ast.walk(ctx.tree):
+            if isinstance(node, ast.Assert):
+                yield self.finding(
+                    ctx, node,
+                    "bare `assert` as a kernel precondition: asserts "
+                    "vanish under `python -O` and carry no shapes; raise "
+                    "KernelContractError (repro.kernels.errors) with the "
+                    "offending values instead",
+                )
+
+
+def default_rules() -> list:
+    return [
+        HostSyncInHotPath(),
+        NumpyInHotPath(),
+        RngKeyReuse(),
+        TracedPythonBranch(),
+        BareAssertInKernel(),
+    ]

@@ -1,0 +1,255 @@
+"""Trace-hygiene pass: recompilation + implicit-transfer detection.
+
+Wraps the repo's ``jax.jit`` entry points (the three Pallas kernel ops
+in interpret mode, CSR neighbor lookup, and the engine's plan-build
+step) in a counting harness, runs each on tiny synthetic shapes with
+call variants that MUST share one compilation (fresh same-shape inputs,
+successive schedule steps), and reports:
+
+* RA201 silent-recompilation — a variant retraced (weak-type
+  promotion, shape drift, python-scalar step instead of ``jnp.int32``);
+* RA202 implicit-host-transfer — executing the compiled step moved
+  data host<->device implicitly (detected via ``jax.transfer_guard``);
+* RA203 unhashable-static-arg — jit rejected a static argument;
+* RA299 harness-failure — the entry point could not be exercised.
+
+The engine entry doubles as a regression gate for the engine's core
+trace contract: ``rng_state(step)`` is a *dynamic* function of the step,
+so one compiled plan-build must serve every step of a κ schedule.
+"""
+from __future__ import annotations
+
+from dataclasses import dataclass
+from typing import Callable, Iterable, List
+
+from repro.analysis.findings import Finding, Severity
+
+
+@dataclass
+class TraceEntry:
+    """One jit entry point plus call variants that must share a trace."""
+
+    name: str
+    anchor: str                     # file:line-ish anchor for findings
+    build: Callable                 # () -> (fn, static_argnames, [() -> (args, kwargs)])
+
+
+def _kernel_entries() -> List[TraceEntry]:
+    import jax.numpy as jnp
+
+    def gather():
+        from repro.kernels.gather.kernel import paged_gather_pallas
+
+        def fn(table, ids):
+            return paged_gather_pallas(
+                table, ids, block_n=8, block_d=128, page=8, interpret=True
+            )
+
+        t0 = jnp.zeros((16, 128), jnp.float32)
+        t1 = jnp.ones((16, 128), jnp.float32)
+        i0 = jnp.zeros((8,), jnp.int32)
+        i1 = jnp.arange(8, dtype=jnp.int32)
+        return fn, (), [
+            lambda: ((t0, i0), {}),
+            lambda: ((t1, i1), {}),
+        ]
+
+    def spmm():
+        from repro.kernels.spmm.kernel import spmm_pallas
+
+        def fn(src, idx, mask):
+            return spmm_pallas(
+                src, idx, mask, mean=True, block_n=8, block_d=128,
+                interpret=True,
+            )
+
+        s0 = jnp.zeros((16, 128), jnp.float32)
+        s1 = jnp.ones((16, 128), jnp.float32)
+        ix = jnp.zeros((8, 4), jnp.int32)
+        mk = jnp.ones((8, 4), bool)
+        return fn, (), [
+            lambda: ((s0, ix, mk), {}),
+            lambda: ((s1, ix, mk), {}),
+        ]
+
+    def seg():
+        from repro.kernels.seg_softmax.kernel import seg_softmax_pallas
+
+        def fn(e, mask):
+            return seg_softmax_pallas(e, mask, block_n=8, interpret=True)
+
+        e0 = jnp.zeros((8, 4), jnp.float32)
+        e1 = jnp.ones((8, 4), jnp.float32)
+        mk = jnp.ones((8, 4), bool)
+        return fn, (), [
+            lambda: ((e0, mk), {}),
+            lambda: ((e1, mk), {}),
+        ]
+
+    return [
+        TraceEntry("kernels.gather[interpret]",
+                   "src/repro/kernels/gather/kernel.py", gather),
+        TraceEntry("kernels.spmm[interpret]",
+                   "src/repro/kernels/spmm/kernel.py", spmm),
+        TraceEntry("kernels.seg_softmax[interpret]",
+                   "src/repro/kernels/seg_softmax/kernel.py", seg),
+    ]
+
+
+def _tiny_graph():
+    import numpy as np
+
+    from repro.core.graph import Graph
+
+    rng = np.random.default_rng(0)
+    V, E = 64, 256
+    src = rng.integers(0, V, E)
+    dst = rng.integers(0, V, E)
+    return Graph.from_edges(src, dst, num_vertices=V, max_degree=8)
+
+
+def _graph_entry() -> TraceEntry:
+    def build():
+        import jax.numpy as jnp
+
+        g = _tiny_graph()
+
+        def fn(seeds):
+            return g.neighbor_table(seeds)
+
+        s0 = jnp.arange(8, dtype=jnp.int32)
+        s1 = jnp.arange(8, 16, dtype=jnp.int32)
+        return fn, (), [
+            lambda: ((s0,), {}),
+            lambda: ((s1,), {}),
+        ]
+
+    return TraceEntry(
+        "graph.neighbor_table", "src/repro/core/graph.py", build
+    )
+
+
+def _engine_entry() -> TraceEntry:
+    def build():
+        import jax.numpy as jnp
+
+        from repro.engine import EngineConfig, MinibatchEngine
+
+        g = _tiny_graph()
+        engine = MinibatchEngine.from_config(
+            g,
+            EngineConfig(
+                mode="independent", num_pes=1, local_batch=8, num_layers=2,
+                sampler="labor0", fanout=4, schedule="smoothed", kappa=4,
+            ),
+        )
+
+        def fn(seeds, step):
+            # the engine's trace contract: rng_state(step) is dynamic, so
+            # one compiled build serves the whole kappa schedule
+            return engine.build_plan(seeds, rng=engine.rng_state(step))
+
+        s0 = jnp.arange(8, dtype=jnp.int32)
+        s1 = jnp.arange(8, 16, dtype=jnp.int32)
+        return fn, (), [
+            lambda: ((s0, jnp.int32(0)), {}),
+            lambda: ((s1, jnp.int32(1)), {}),
+            lambda: ((s0, jnp.int32(7)), {}),  # crosses the kappa window
+        ]
+
+    return TraceEntry(
+        "engine.build_plan[smoothed]", "src/repro/engine/engine.py", build
+    )
+
+
+def default_entries() -> List[TraceEntry]:
+    return _kernel_entries() + [_graph_entry(), _engine_entry()]
+
+
+def run_trace(entries: Iterable[TraceEntry] = None) -> List[Finding]:
+    import jax
+
+    findings: List[Finding] = []
+    for entry in entries if entries is not None else default_entries():
+        try:
+            fn, static_argnames, scenarios = entry.build()
+        except Exception as e:
+            findings.append(Finding(
+                rule="RA299", severity=Severity.ERROR,
+                message=f"trace harness for `{entry.name}` failed to "
+                        f"build: {e!r}",
+                file=entry.anchor,
+            ))
+            continue
+
+        traces = 0
+
+        def counted(*args, __fn=fn, **kwargs):
+            nonlocal traces
+            traces += 1
+            return __fn(*args, **kwargs)
+
+        jitted = jax.jit(counted, static_argnames=static_argnames)
+        try:
+            # materialize every scenario's inputs up front: argument
+            # creation is an *explicit* transfer and must not trip the
+            # guard below
+            calls = [make() for make in scenarios]
+            # first call compiles (constant transfers are legitimate here)
+            args, kwargs = calls[0]
+            jax.block_until_ready(jitted(*args, **kwargs))
+            # subsequent calls must neither retrace nor transfer
+            with jax.transfer_guard("disallow"):
+                for args, kwargs in calls[1:]:
+                    jax.block_until_ready(jitted(*args, **kwargs))
+        except TypeError as e:
+            if "unhashable" in str(e).lower():
+                findings.append(Finding(
+                    rule="RA203", severity=Severity.ERROR,
+                    message=f"`{entry.name}`: unhashable static argument "
+                            f"forces cache misses: {e}",
+                    file=entry.anchor,
+                ))
+            else:
+                findings.append(Finding(
+                    rule="RA299", severity=Severity.ERROR,
+                    message=f"trace harness for `{entry.name}` raised: "
+                            f"{e!r}",
+                    file=entry.anchor,
+                ))
+            continue
+        except Exception as e:
+            if "transfer" in str(e).lower():
+                findings.append(Finding(
+                    rule="RA202", severity=Severity.ERROR,
+                    message=f"`{entry.name}`: implicit host transfer while "
+                            f"executing the compiled step: {e}",
+                    file=entry.anchor,
+                ))
+            else:
+                findings.append(Finding(
+                    rule="RA299", severity=Severity.ERROR,
+                    message=f"trace harness for `{entry.name}` raised: "
+                            f"{e!r}",
+                    file=entry.anchor,
+                ))
+            continue
+
+        if traces > 1:
+            findings.append(Finding(
+                rule="RA201", severity=Severity.ERROR,
+                message=f"`{entry.name}` recompiled: {traces} traces for "
+                        f"{len(scenarios)} calls that must share one "
+                        "compilation (check weak-type promotion and "
+                        "python-scalar arguments)",
+                file=entry.anchor,
+                extra=dict(traces=traces, calls=len(scenarios)),
+            ))
+        else:
+            findings.append(Finding(
+                rule="RA200", severity=Severity.INFO,
+                message=f"`{entry.name}`: 1 trace across {len(scenarios)} "
+                        "calls, no implicit transfers",
+                file=entry.anchor,
+            ))
+    return findings

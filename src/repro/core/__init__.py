@@ -9,7 +9,7 @@ Two layers live here:
   re-exported below, which wire the kernel layer behind one config so
   consumers never branch on minibatching mode.
 """
-from repro.core.graph import Graph, INVALID
+from repro.core.graph import Graph, GraphValidationError, INVALID
 from repro.core.partition import Partition, make_partition, cross_edge_ratio
 from repro.core.rng import DependentRNG
 from repro.core.minibatch import (
@@ -34,6 +34,7 @@ from repro.core.feature_loader import FeatureStore
 
 __all__ = [
     "Graph",
+    "GraphValidationError",
     "INVALID",
     "Partition",
     "make_partition",

@@ -24,6 +24,16 @@ import numpy as np
 INVALID = np.int32(np.iinfo(np.int32).max)  # padding sentinel for vertex ids
 
 
+class GraphValidationError(ValueError):
+    """A CSR graph failed well-formedness checks (see Graph.validate)."""
+
+    def __init__(self, problems: list):
+        self.problems = list(problems)
+        super().__init__(
+            "malformed CSR graph: " + "; ".join(self.problems)
+        )
+
+
 @dataclass(frozen=True)
 class Graph:
     """Static-shape CSR graph of in-edges.
@@ -49,6 +59,77 @@ class Graph:
     @property
     def degrees(self) -> jax.Array:
         return self.indptr[1:] - self.indptr[:-1]
+
+    def validate(self) -> "Graph":
+        """Check CSR well-formedness; raise GraphValidationError if broken.
+
+        Verifies: int32 dtypes, ``indptr`` shape ``(V+1,)`` with
+        ``indptr[0] == 0`` and ``indptr[-1] == num_edges``, monotone
+        non-decreasing ``indptr``, in-range ``indices``, per-row degrees
+        within ``max_degree``, and ``edge_types`` alignment.  Costs one
+        O(V+E) device reduction plus a host sync, so call it at
+        construction boundaries (``MinibatchEngine.from_config`` does),
+        never per step.  Returns ``self`` for chaining.
+        """
+        problems = []
+        V, E = self.num_vertices, self.num_edges
+        if self.indptr.dtype != jnp.int32:
+            problems.append(f"indptr dtype {self.indptr.dtype} != int32")
+        if self.indices.dtype != jnp.int32:
+            problems.append(f"indices dtype {self.indices.dtype} != int32")
+        if self.indptr.shape != (V + 1,):
+            problems.append(
+                f"indptr shape {self.indptr.shape} != ({V + 1},) "
+                f"for num_vertices={V}"
+            )
+        if self.indices.shape != (E,):
+            problems.append(
+                f"indices shape {self.indices.shape} != ({E},) "
+                f"for num_edges={E}"
+            )
+        if self.edge_types is not None and self.edge_types.shape != (E,):
+            problems.append(
+                f"edge_types shape {self.edge_types.shape} != ({E},)"
+            )
+        if problems:  # shape/dtype errors make the value checks undefined
+            raise GraphValidationError(problems)
+
+        first = int(self.indptr[0])
+        last = int(self.indptr[-1])
+        if first != 0:
+            problems.append(f"indptr[0] == {first} != 0")
+        if last != E:
+            problems.append(f"indptr[-1] == {last} != num_edges ({E})")
+        deg = self.degrees
+        n_nonmono = int(jnp.sum(deg < 0))
+        if n_nonmono:
+            problems.append(
+                f"indptr not monotone non-decreasing at {n_nonmono} row(s)"
+            )
+        elif int(jnp.max(deg, initial=0)) > self.max_degree:
+            problems.append(
+                f"max in-degree {int(jnp.max(deg, initial=0))} exceeds "
+                f"declared max_degree={self.max_degree}"
+            )
+        if E:
+            n_oob = int(jnp.sum((self.indices < 0) | (self.indices >= V)))
+            if n_oob:
+                problems.append(
+                    f"{n_oob} edge indices outside [0, {V})"
+                )
+        if self.edge_types is not None and E:
+            n_bad_et = int(jnp.sum(
+                (self.edge_types < 0)
+                | (self.edge_types >= self.num_edge_types)
+            ))
+            if n_bad_et:
+                problems.append(
+                    f"{n_bad_et} edge types outside "
+                    f"[0, {self.num_edge_types})"
+                )
+        if problems:
+            raise GraphValidationError(problems)
+        return self
 
     @staticmethod
     def from_edges(

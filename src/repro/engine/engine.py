@@ -68,6 +68,7 @@ class MinibatchEngine:
         cls, graph: Graph, config: EngineConfig, dataset=None
     ) -> "MinibatchEngine":
         """Derive capacities, partition, and executor from the config."""
+        graph.validate()  # malformed CSR fails here, not mid-stream
         cfg, cap = config, config.capacity
         V = graph.num_vertices
         sampler = make_sampler(cfg.sampler, fanout=cfg.fanout)

@@ -16,8 +16,12 @@ feature dimension is tiled in 128-lane slices, and the embedding-table
 gather is re-organised as a *paged* scan (grid over table pages resident
 in VMEM, accumulating hits) instead of random HBM access.
 """
+from repro.kernels.errors import KernelContractError, require_divisible
 from repro.kernels.spmm.ops import spmm_mean, spmm_sum
 from repro.kernels.gather.ops import paged_gather
 from repro.kernels.seg_softmax.ops import seg_softmax
 
-__all__ = ["spmm_mean", "spmm_sum", "paged_gather", "seg_softmax"]
+__all__ = [
+    "spmm_mean", "spmm_sum", "paged_gather", "seg_softmax",
+    "KernelContractError", "require_divisible",
+]

@@ -22,6 +22,8 @@ import jax
 import jax.numpy as jnp
 from jax.experimental import pallas as pl
 
+from repro.kernels.errors import require_divisible
+
 
 def _gather_kernel(ids_ref, table_ref, out_ref, *, page: int):
     p = pl.program_id(2)
@@ -55,7 +57,11 @@ def paged_gather_pallas(
 ) -> jax.Array:
     V, d = table.shape
     (n,) = ids.shape
-    assert V % page == 0 and d % block_d == 0 and n % block_n == 0
+    require_divisible("paged_gather_pallas", [
+        ("V", V, "page", page),
+        ("d", d, "block_d", block_d),
+        ("n", n, "block_n", block_n),
+    ])
     grid = (n // block_n, d // block_d, V // page)
     return pl.pallas_call(
         functools.partial(_gather_kernel, page=page),

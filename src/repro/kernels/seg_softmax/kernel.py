@@ -14,6 +14,8 @@ import jax
 import jax.numpy as jnp
 from jax.experimental import pallas as pl
 
+from repro.kernels.errors import require_divisible
+
 
 def _seg_softmax_kernel(e_ref, mask_ref, out_ref):
     e = e_ref[...]         # (bn, w)
@@ -36,7 +38,7 @@ def seg_softmax_pallas(
     interpret: bool = False,
 ) -> jax.Array:
     n, w = e.shape
-    assert n % block_n == 0
+    require_divisible("seg_softmax_pallas", [("n", n, "block_n", block_n)])
     grid = (n // block_n,)
     return pl.pallas_call(
         _seg_softmax_kernel,

@@ -19,6 +19,8 @@ import jax
 import jax.numpy as jnp
 from jax.experimental import pallas as pl
 
+from repro.kernels.errors import require_divisible
+
 
 def _spmm_kernel(src_ref, idx_ref, mask_ref, out_ref, *, mean: bool):
     src = src_ref[...]          # (S, bd) feature slice, VMEM resident
@@ -51,7 +53,10 @@ def spmm_pallas(
     """(S, d) x (n, w) -> (n, d); shapes must be pre-padded to blocks."""
     S, d = src.shape
     n, w = nbr_idx.shape
-    assert n % block_n == 0 and d % block_d == 0, (n, d, block_n, block_d)
+    require_divisible("spmm_pallas", [
+        ("n", n, "block_n", block_n),
+        ("d", d, "block_d", block_d),
+    ])
     grid = (n // block_n, d // block_d)
     return pl.pallas_call(
         functools.partial(_spmm_kernel, mean=mean),

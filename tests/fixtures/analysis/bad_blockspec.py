@@ -1,0 +1,30 @@
+"""Known-bad fixture: BlockSpec block size does not divide the operand.
+
+The contract checker (RA101) must flag both the input and output spec:
+the operand has 128 rows but the block is 48 wide, so the final tile
+reads/writes out of bounds.
+"""
+import jax
+import jax.numpy as jnp
+from jax.experimental import pallas as pl
+
+
+def _copy_kernel(x_ref, o_ref):
+    o_ref[...] = x_ref[...]
+
+
+def bad_copy(x):
+    (n,) = x.shape
+    grid = (n // 64,)
+    return pl.pallas_call(
+        _copy_kernel,
+        grid=grid,
+        in_specs=[pl.BlockSpec((48,), lambda i: (i,))],
+        out_specs=pl.BlockSpec((48,), lambda i: (i,)),
+        out_shape=jax.ShapeDtypeStruct((n,), x.dtype),
+    )(x)
+
+
+ANALYSIS_TARGETS = [
+    {"fn": "bad_copy", "args": lambda: ((jnp.zeros((128,), jnp.float32),), {})},
+]

@@ -1,0 +1,9 @@
+"""Known-bad fixture: PRNG key consumed twice -> exactly one RA003."""
+import jax
+
+
+def init_params(seed):
+    key = jax.random.PRNGKey(seed)
+    w = jax.random.normal(key, (4, 4))
+    b = jax.random.normal(key, (4,))  # <- RA003: key already consumed
+    return w, b

@@ -1,0 +1,34 @@
+"""Known-bad fixture: revisited output tile accumulated without init.
+
+The output index map ignores the second grid axis, so every output tile
+is visited twice; the kernel accumulates with ``+=`` but never
+initializes on the first visit (no ``pl.when(p == 0)`` branch) — the
+contract checker must flag RA105.
+"""
+import jax
+import jax.numpy as jnp
+from jax.experimental import pallas as pl
+
+
+def _acc_kernel(x_ref, o_ref):
+    o_ref[...] += x_ref[...]  # <- RA105: no first-visit init
+
+
+def bad_accumulate(x):
+    (n,) = x.shape
+    block = 8
+    return pl.pallas_call(
+        _acc_kernel,
+        grid=(n // block, 2),
+        in_specs=[pl.BlockSpec((block,), lambda i, p: (i,))],
+        out_specs=pl.BlockSpec((block,), lambda i, p: (i,)),
+        out_shape=jax.ShapeDtypeStruct((n,), x.dtype),
+    )(x)
+
+
+ANALYSIS_TARGETS = [
+    {
+        "fn": "bad_accumulate",
+        "args": lambda: ((jnp.zeros((16,), jnp.float32),), {}),
+    },
+]

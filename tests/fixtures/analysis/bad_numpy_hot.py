@@ -1,0 +1,9 @@
+"""Known-bad fixture: host numpy inside a jit hot path -> exactly one RA002."""
+import jax
+import numpy as np
+
+
+@jax.jit
+def step(x):
+    mean = np.mean(x)  # <- RA002: host numpy op under trace
+    return x - mean

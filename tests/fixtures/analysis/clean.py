@@ -1,0 +1,51 @@
+"""Clean fixture: good key discipline + a well-formed pallas_call site.
+
+Must produce zero error findings under every pass: keys are split
+before reuse, the kernel initializes its revisited output tile with
+``pl.when(p == 0)``, and every block divides its operand.
+"""
+import jax
+import jax.numpy as jnp
+from jax.experimental import pallas as pl
+
+
+def init_params(seed):
+    key = jax.random.PRNGKey(seed)
+    key, kw = jax.random.split(key)
+    w = jax.random.normal(kw, (4, 4))
+    key, kb = jax.random.split(key)
+    b = jax.random.normal(kb, (4,))
+    return w, b
+
+
+def _sum_kernel(x_ref, o_ref):
+    p = pl.program_id(1)
+    contrib = x_ref[...]
+
+    @pl.when(p == 0)
+    def _init():
+        o_ref[...] = contrib
+
+    @pl.when(p != 0)
+    def _acc():
+        o_ref[...] += contrib
+
+
+def good_accumulate(x):
+    (n,) = x.shape
+    block = 8
+    return pl.pallas_call(
+        _sum_kernel,
+        grid=(n // block, 2),
+        in_specs=[pl.BlockSpec((block,), lambda i, p: (i,))],
+        out_specs=pl.BlockSpec((block,), lambda i, p: (i,)),
+        out_shape=jax.ShapeDtypeStruct((n,), x.dtype),
+    )(x)
+
+
+ANALYSIS_TARGETS = [
+    {
+        "fn": "good_accumulate",
+        "args": lambda: ((jnp.zeros((16,), jnp.float32),), {}),
+    },
+]

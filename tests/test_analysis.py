@@ -1,0 +1,344 @@
+"""repro.analysis: lint rules, kernel contracts, trace hygiene, CLI."""
+import dataclasses
+import json
+import os
+import subprocess
+import sys
+
+import jax.numpy as jnp
+import numpy as np
+import pytest
+
+from repro.analysis import run_analysis
+from repro.analysis.cli import main
+from repro.analysis.findings import (
+    Finding,
+    Report,
+    Severity,
+    suppressed_rules,
+)
+from repro.core.graph import Graph, GraphValidationError
+from repro.kernels.errors import KernelContractError
+
+REPO = os.path.dirname(os.path.dirname(os.path.abspath(__file__)))
+SRC = os.path.join(REPO, "src")
+FIXTURES = os.path.join(REPO, "tests", "fixtures", "analysis")
+
+
+def fixture(name):
+    return os.path.join(FIXTURES, name)
+
+
+def errors(report):
+    return [f for f in report.findings if f.severity >= Severity.ERROR]
+
+
+# --- known-bad fixtures: each must produce exactly the expected finding ----
+
+def test_bad_key_reuse_fixture():
+    rep = run_analysis([fixture("bad_key_reuse.py")], passes=["lint"])
+    errs = errors(rep)
+    assert [f.rule for f in errs] == ["RA003"]
+    assert errs[0].line == 8
+    assert errs[0].file.endswith("bad_key_reuse.py")
+    assert "key" in errs[0].message
+
+
+def test_bad_numpy_hot_fixture():
+    rep = run_analysis([fixture("bad_numpy_hot.py")], passes=["lint"])
+    errs = errors(rep)
+    assert [f.rule for f in errs] == ["RA002"]
+    assert errs[0].line == 8
+    assert "numpy.mean" in errs[0].message
+
+
+def test_bad_blockspec_fixture():
+    rep = run_analysis([fixture("bad_blockspec.py")], passes=["contracts"])
+    errs = errors(rep)
+    # both the input and the output spec use the bad 48-wide block
+    assert [f.rule for f in errs] == ["RA101", "RA101"]
+    assert all(f.line == 19 for f in errs), [f.line for f in errs]
+    assert errs[0].extra["block"] == 48 and errs[0].extra["size"] == 128
+
+
+def test_bad_missing_init_fixture():
+    rep = run_analysis([fixture("bad_missing_init.py")], passes=["contracts"])
+    errs = errors(rep)
+    assert [f.rule for f in errs] == ["RA105"]
+    assert "pl.when" in errs[0].message
+
+
+def test_clean_fixture_all_rules():
+    rep = run_analysis(
+        [fixture("clean.py")], passes=["lint", "contracts"]
+    )
+    assert errors(rep) == []
+    # the well-formed pallas site is positively verified
+    assert any(f.rule == "RA100" for f in rep.findings)
+
+
+def test_clean_repo_src():
+    """The shipped tree must carry zero error-severity findings."""
+    rep = run_analysis([SRC], passes=["lint", "contracts"])
+    assert errors(rep) == [], "\n".join(f.render() for f in errors(rep))
+    assert rep.files_scanned > 50
+    # the contract checker positively verified all three Pallas kernels
+    verified = {
+        f.extra.get("kernel") for f in rep.findings if f.rule == "RA100"
+    }
+    assert {"gather", "spmm", "seg_softmax"} <= verified
+
+
+def test_trace_pass_clean_on_repo():
+    from repro.analysis.trace import run_trace
+
+    findings = run_trace()
+    errs = [f for f in findings if f.severity >= Severity.ERROR]
+    assert errs == [], "\n".join(f.render() for f in errs)
+    # every entry reported a single shared trace
+    names = {f.message.split("`")[1] for f in findings if f.rule == "RA200"}
+    assert "engine.build_plan[smoothed]" in names
+
+
+def test_trace_pass_detects_recompilation():
+    from repro.analysis.trace import TraceEntry, run_trace
+
+    def build():
+        def fn(x):
+            return x + 1
+
+        # python floats are weak-typed: f32 vs f64-weak retraces
+        a = jnp.float32(1.0)
+        return fn, (), [
+            lambda: ((a,), {}),
+            lambda: ((jnp.asarray(2, jnp.int32),), {}),  # dtype change
+        ]
+
+    findings = run_trace([TraceEntry("synthetic.retrace", "<test>", build)])
+    assert [f.rule for f in findings] == ["RA201"]
+    assert findings[0].extra["traces"] == 2
+
+
+# --- lint framework mechanics ----------------------------------------------
+
+def test_inline_suppression(tmp_path):
+    p = tmp_path / "suppressed.py"
+    p.write_text(
+        "import jax\n\n"
+        "def f(seed):\n"
+        "    key = jax.random.PRNGKey(seed)\n"
+        "    a = jax.random.normal(key, (2,))\n"
+        "    b = jax.random.normal(key, (2,))  # ra: ignore[RA003]\n"
+        "    return a, b\n"
+    )
+    rep = run_analysis([str(p)], passes=["lint"])
+    assert errors(rep) == []
+    # a non-matching id does NOT suppress
+    p.write_text(p.read_text().replace("RA003", "RA001"))
+    rep = run_analysis([str(p)], passes=["lint"])
+    assert [f.rule for f in errors(rep)] == ["RA003"]
+
+
+def test_suppression_parsing():
+    assert suppressed_rules("x = 1") is None
+    assert suppressed_rules("x = 1  # ra: ignore") == frozenset()
+    assert suppressed_rules("x  # repro-analysis: ignore[RA001, RA003]") == {
+        "RA001", "RA003",
+    }
+
+
+def test_hot_path_requires_jit_scope(tmp_path):
+    # the same numpy call OUTSIDE a jit scope is fine
+    p = tmp_path / "coldpath.py"
+    p.write_text(
+        "import numpy as np\n\n"
+        "def host_prep(x):\n"
+        "    return np.asarray(x).mean()\n"
+    )
+    rep = run_analysis([str(p)], passes=["lint"])
+    assert rep.findings == []
+
+
+def test_stream_class_is_hot(tmp_path):
+    p = tmp_path / "stream_like.py"
+    p.write_text(
+        "class MinibatchStream:\n"
+        "    def _make(self, plan):\n"
+        "        return plan.ids.item()\n"
+    )
+    rep = run_analysis([str(p)], passes=["lint"])
+    assert [f.rule for f in errors(rep)] == ["RA001"]
+
+
+# --- report / CLI -----------------------------------------------------------
+
+def test_report_json_round_trip():
+    rep = Report(
+        findings=[
+            Finding("RA001", Severity.ERROR, "m", "f.py", 3),
+            Finding("RA100", Severity.INFO, "ok", "g.py", 1),
+        ],
+        passes_run=["lint"],
+        files_scanned=2,
+    )
+    d = json.loads(rep.render_json())
+    assert d["rule_counts"] == {"RA001": 1, "RA100": 1}
+    assert d["counts"]["error"] == 1
+    assert d["findings"][0]["file"] == "f.py"
+    assert rep.exit_code() == 1
+    assert rep.exit_code(Severity.INFO) == 1
+    assert Report().exit_code() == 0
+
+
+def test_cli_json_and_exit_codes(tmp_path, capsys):
+    out_file = tmp_path / "report.json"
+    code = main([
+        fixture("bad_blockspec.py"), "--format", "json",
+        "--output", str(out_file),
+    ])
+    assert code == 1
+    payload = json.loads(out_file.read_text())
+    assert payload["rule_counts"] == {"RA101": 2}
+    capsys.readouterr()
+    assert main([fixture("clean.py")]) == 0
+    capsys.readouterr()
+
+
+def test_cli_module_entry_point():
+    proc = subprocess.run(
+        [sys.executable, "-m", "repro.analysis",
+         fixture("bad_missing_init.py"), "--format", "json"],
+        capture_output=True, text=True,
+        env={**os.environ, "PYTHONPATH": SRC},
+        cwd=REPO,
+    )
+    assert proc.returncode == 1, proc.stderr
+    payload = json.loads(proc.stdout)
+    assert payload["rule_counts"] == {"RA105": 1}
+
+
+def test_fail_on_warning_gate(tmp_path, capsys):
+    # RA105 warning variant: revisited tile, no accumulation, no init
+    p = tmp_path / "warn_kernel.py"
+    p.write_text(
+        "import jax\n"
+        "import jax.numpy as jnp\n"
+        "from jax.experimental import pallas as pl\n\n\n"
+        "def _k(x_ref, o_ref):\n"
+        "    o_ref[...] = x_ref[...]\n\n\n"
+        "def overwrite(x):\n"
+        "    (n,) = x.shape\n"
+        "    return pl.pallas_call(\n"
+        "        _k, grid=(n // 8, 2),\n"
+        "        in_specs=[pl.BlockSpec((8,), lambda i, p: (i,))],\n"
+        "        out_specs=pl.BlockSpec((8,), lambda i, p: (i,)),\n"
+        "        out_shape=jax.ShapeDtypeStruct((n,), x.dtype),\n"
+        "    )(x)\n\n\n"
+        "ANALYSIS_TARGETS = [\n"
+        "    {'fn': 'overwrite',\n"
+        "     'args': lambda: ((jnp.zeros((16,), jnp.float32),), {})},\n"
+        "]\n"
+    )
+    assert main([str(p), "--passes", "contracts"]) == 0
+    capsys.readouterr()
+    assert main(
+        [str(p), "--passes", "contracts", "--fail-on", "warning"]
+    ) == 1
+    capsys.readouterr()
+
+
+# --- kernel contract errors (typed preconditions) ---------------------------
+
+def test_kernel_contract_errors_carry_values():
+    from repro.kernels.gather.kernel import paged_gather_pallas
+    from repro.kernels.seg_softmax.kernel import seg_softmax_pallas
+    from repro.kernels.spmm.kernel import spmm_pallas
+
+    with pytest.raises(KernelContractError) as ei:
+        paged_gather_pallas(
+            jnp.zeros((100, 128)), jnp.zeros((64,), jnp.int32),
+            block_n=64, block_d=128, page=64, interpret=True,
+        )
+    assert ei.value.kernel == "paged_gather_pallas"
+    assert ei.value.values == {"V": 100, "page": 64}
+    assert "V % page" in str(ei.value)
+
+    with pytest.raises(KernelContractError) as ei:
+        spmm_pallas(
+            jnp.zeros((64, 100)), jnp.zeros((8, 4), jnp.int32),
+            jnp.ones((8, 4), bool), block_n=8, block_d=128, interpret=True,
+        )
+    assert ei.value.values == {"d": 100, "block_d": 128}
+
+    with pytest.raises(KernelContractError):
+        seg_softmax_pallas(
+            jnp.zeros((100, 4)), jnp.ones((100, 4), bool),
+            block_n=64, interpret=True,
+        )
+
+
+def test_kernels_still_work_after_contract_change():
+    from repro.kernels.seg_softmax.kernel import seg_softmax_pallas
+    from repro.kernels.seg_softmax.ref import seg_softmax_ref
+
+    e = jnp.asarray(np.random.default_rng(0).standard_normal((16, 4)),
+                    jnp.float32)
+    mask = jnp.ones((16, 4), bool)
+    out = seg_softmax_pallas(e, mask, block_n=8, interpret=True)
+    np.testing.assert_allclose(
+        np.asarray(out), np.asarray(seg_softmax_ref(e, mask)), atol=1e-5
+    )
+
+
+# --- Graph.validate ---------------------------------------------------------
+
+def _ring_graph():
+    return Graph.from_edges(
+        np.array([0, 1, 2, 3]), np.array([1, 2, 3, 0]), num_vertices=4
+    )
+
+
+def test_graph_validate_accepts_well_formed():
+    g = _ring_graph()
+    assert g.validate() is g  # chains
+
+
+def test_graph_validate_rejects_corruption():
+    g = _ring_graph()
+
+    bad_indptr = dataclasses.replace(
+        g, indptr=jnp.asarray([0, 3, 1, 2, 4], jnp.int32)
+    )
+    with pytest.raises(GraphValidationError, match="monotone"):
+        bad_indptr.validate()
+
+    bad_indices = dataclasses.replace(
+        g, indices=jnp.asarray([0, 1, 9, 2], jnp.int32)
+    )
+    with pytest.raises(GraphValidationError, match="outside"):
+        bad_indices.validate()
+
+    bad_dtype = dataclasses.replace(
+        g, indices=g.indices.astype(jnp.float32)
+    )
+    with pytest.raises(GraphValidationError, match="dtype"):
+        bad_dtype.validate()
+
+    bad_len = dataclasses.replace(
+        g, indptr=jnp.asarray([0, 1, 2, 4], jnp.int32)
+    )
+    with pytest.raises(GraphValidationError, match="indptr shape"):
+        bad_len.validate()
+
+
+def test_engine_rejects_malformed_graph():
+    from repro.engine import EngineConfig, MinibatchEngine
+
+    g = _ring_graph()
+    bad = dataclasses.replace(
+        g, indices=jnp.asarray([0, 1, 9, 2], jnp.int32)
+    )
+    with pytest.raises(GraphValidationError):
+        MinibatchEngine.from_config(
+            bad, EngineConfig(local_batch=4, num_layers=1, fanout=2)
+        )
