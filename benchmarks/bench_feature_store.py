@@ -1,0 +1,112 @@
+"""Fig. 5-shape curves through the *device* cache policy.
+
+``bench_cache_kappa`` replays engine traces through the exact LRU
+oracle; this benchmark replays the same κ-scheduled engine streams
+through the tiered store's CLOCK policy (`repro.store`) and reports both
+side by side — miss rate vs dependency window κ and vs cache capacity —
+plus the oracle gap the differential harness bounds
+(``tests/test_feature_store.py``).
+
+Writes ``BENCH_feature_store.json`` so CI snapshots have a baseline to
+gate against; stdout gets the usual CSV.
+"""
+from __future__ import annotations
+
+import json
+
+import numpy as np
+
+from benchmarks.common import Csv, bench_graph
+from repro.core.cache import CooperativeCacheArray, LRUCache
+from repro.engine import EngineConfig, MinibatchEngine
+from repro.store import ClockCache
+
+KAPPAS = [1, 4, 16, 64, None]  # None = infinite dependency window
+CAP_FRACS = [2, 4, 8]          # capacity = V // frac
+STEPS = 24
+BATCH = 128
+P = 4
+WAYS = 8
+OUT_JSON = "BENCH_feature_store.json"
+
+
+def _trace(g, mode: str, kappa):
+    """Per-step input-id arrays from one κ-scheduled engine stream."""
+    num_pes = P if mode == "cooperative" else 1
+    eng = MinibatchEngine.from_config(
+        g,
+        EngineConfig(
+            mode=mode, num_pes=num_pes, local_batch=BATCH // num_pes,
+            num_layers=2, sampler="labor0", fanout=5,
+            schedule="smoothed", kappa=kappa, seed=11,
+        ),
+    )
+    return [np.asarray(item.plan.input_ids) for item in eng.stream(STEPS)]
+
+
+def _cap(v: int) -> int:
+    return max(WAYS, v // WAYS * WAYS)  # CLOCK needs capacity % ways == 0
+
+
+def run(coop: bool = True, fast: bool = False) -> Csv:
+    g = bench_graph()
+    V = g.num_vertices
+    kappas = [1, 16, None] if fast else KAPPAS
+    csv = Csv(["sweep", "mode", "kappa", "capacity", "policy", "miss_rate"])
+    payload = {"V": V, "steps": STEPS, "batch": BATCH, "ways": WAYS,
+               "rows": []}
+
+    def record(sweep, mode, kappa, cap, policy, miss):
+        k = kappa if kappa else "inf"
+        csv.add(sweep, mode, k, cap, policy, round(miss, 4))
+        payload["rows"].append({
+            "sweep": sweep, "mode": mode, "kappa": k, "capacity": cap,
+            "policy": policy, "miss_rate": round(miss, 4),
+        })
+
+    # -- miss rate vs kappa at capacity V/2 (Fig. 5a shape) ----------------
+    cap = _cap(V // 2)
+    for kappa in kappas:
+        trace = _trace(g, "independent", kappa)
+        clock = ClockCache(cap, ways=WAYS)
+        lru = LRUCache(cap)
+        for ids in trace:
+            clock.access_batch(ids.ravel())
+            lru.access_batch(ids.ravel())
+        record("kappa", "independent", kappa, cap, "clock", clock.miss_rate)
+        record("kappa", "independent", kappa, cap, "lru", lru.miss_rate)
+
+    # -- miss rate vs capacity at fixed kappa ------------------------------
+    trace = _trace(g, "independent", 16)
+    for frac in CAP_FRACS:
+        cap = _cap(V // frac)
+        clock = ClockCache(cap, ways=WAYS)
+        lru = LRUCache(cap)
+        for ids in trace:
+            clock.access_batch(ids.ravel())
+            lru.access_batch(ids.ravel())
+        record("capacity", "independent", 16, cap, "clock", clock.miss_rate)
+        record("capacity", "independent", 16, cap, "lru", lru.miss_rate)
+
+    # -- cooperative per-PE owned caches (Fig. 5b shape) -------------------
+    if coop:
+        cap = _cap(V // 2)
+        for kappa in kappas:
+            trace = _trace(g, "cooperative", kappa)
+            clock = ClockCache(_cap(cap // P), ways=WAYS, num_pes=P)
+            arr = CooperativeCacheArray(num_pes=P, capacity_per_pe=cap // P)
+            for per_pe in trace:
+                clock.access_batch(per_pe)
+                arr.access(per_pe)
+            record("kappa", "cooperative", kappa, cap, "clock",
+                   clock.miss_rate)
+            record("kappa", "cooperative", kappa, cap, "lru", arr.miss_rate)
+
+    with open(OUT_JSON, "w") as f:
+        json.dump(payload, f, indent=2, sort_keys=True)
+    print(f"# wrote {OUT_JSON} ({len(payload['rows'])} rows)", flush=True)
+    return csv
+
+
+if __name__ == "__main__":
+    run().emit()

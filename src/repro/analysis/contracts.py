@@ -62,7 +62,7 @@ class KernelTarget:
 
 
 def repo_targets() -> List[KernelTarget]:
-    """The three shipped Pallas kernels, at production block sizes."""
+    """The shipped Pallas kernels, at production block sizes."""
     import jax.numpy as jnp
 
     def gather_args():
@@ -97,6 +97,18 @@ def repo_targets() -> List[KernelTarget]:
         mask = jnp.ones((500, 16), bool)
         return (e, mask), dict(block_n=256)
 
+    def probe_args():
+        tags = jnp.zeros((2048, 8), jnp.int32)
+        sets = jnp.zeros((512,), jnp.int32)
+        ids = jnp.zeros((512,), jnp.int32)
+        return (tags, sets, ids), dict(block_n=512, page=1024)
+
+    def probe_bad():
+        tags = jnp.zeros((2000, 8), jnp.int32)  # 2000 % 1024 != 0
+        sets = jnp.zeros((512,), jnp.int32)
+        ids = jnp.zeros((512,), jnp.int32)
+        return (tags, sets, ids), dict(block_n=512, page=1024)
+
     return [
         KernelTarget(
             "gather", "repro.kernels.gather.kernel", "paged_gather_pallas",
@@ -109,6 +121,10 @@ def repo_targets() -> List[KernelTarget]:
         KernelTarget(
             "seg_softmax", "repro.kernels.seg_softmax.kernel",
             "seg_softmax_pallas", seg_args, [seg_bad],
+        ),
+        KernelTarget(
+            "tag_probe", "repro.store.kernel", "tag_probe_pallas",
+            probe_args, [probe_bad],
         ),
     ]
 

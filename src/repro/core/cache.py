@@ -11,6 +11,7 @@ global cache size" (§4.3.1).
 """
 from __future__ import annotations
 
+import bisect
 from collections import OrderedDict
 from dataclasses import dataclass, field
 
@@ -27,11 +28,122 @@ class LRUCache:
     hits: int = 0
     misses: int = 0
     _store: OrderedDict = field(default_factory=OrderedDict)
+    # primary fast-path state: LRU-ordered key array, oldest first.
+    # ``_store`` is only materialized for the sequential fallback;
+    # ``_store_stale`` marks it behind ``_keys``.
+    _keys: np.ndarray = field(default=None, repr=False)
+    _store_stale: bool = field(default=False, repr=False)
 
     def access_batch(self, ids: np.ndarray) -> int:
-        """Access the unique valid ids of one minibatch; returns #misses."""
-        ids = np.unique(np.asarray(ids).ravel())
+        """Access the unique valid ids of one minibatch; returns #misses.
+
+        Equivalent to processing the sorted unique ids one at a time
+        (hit -> move to end; miss -> insert, evict LRU front), but run as
+        a vectorized membership precheck — one ``searchsorted`` of the
+        LRU-ordered key array into the (sorted-unique) batch — plus bulk
+        array surgery, so oracle replays on large traces are not
+        dominated by the per-element Python loop.
+
+        The only subtlety is a cached key that is both in the batch and
+        within eviction reach: whether it is re-hit or evicted-then-
+        re-missed depends on the interleaving of its access with the
+        eviction stream.  Because evictions consume original-key
+        positions front-to-back (hits leave the front region; with
+        ``n <= capacity`` reinserted keys are never re-evicted), each
+        such *at-risk* key is resolved exactly, in access order: it is
+        evicted iff the evictions issued before its access
+        (``misses_so_far - free_slack``) cover every consumable position
+        ahead of it plus itself.  Only batches larger than the capacity
+        fall back to the sequential walk.
+        """
+        ids = np.unique(np.asarray(ids).ravel().astype(np.int64))
         ids = ids[ids != _INVALID]
+        n = len(ids)
+        if n == 0:
+            return 0
+        if n > self.capacity:
+            # evictions can reach keys reinserted mid-batch; rare — the
+            # whole cache turns over — so exactness beats speed here
+            return self._access_sequential(ids)
+        if self._keys is None:
+            self._keys = np.fromiter(
+                self._store.keys(), dtype=np.int64, count=len(self._store)
+            )
+        keys = self._keys  # LRU order, oldest first
+        m0 = len(keys)
+        pos = np.searchsorted(ids, keys)
+        touched = np.zeros(m0, bool)
+        inb = pos < n
+        touched[inb] = ids[pos[inb]] == keys[inb]
+        member = np.zeros(n, bool)  # batch ranks present in the cache
+        member[pos[touched]] = True
+        base_miss = n - int(touched.sum())  # misses ignoring evictions
+        # base_cum[r] = definite misses among ids[:r]
+        base_cum = np.concatenate(([0], np.cumsum(~member)))
+        slack = self.capacity - m0
+        tp = np.flatnonzero(touched)  # touched positions, oldest first
+        # Eviction-frontier upper bound F: the frontier passes f
+        # positions after E evictions and S skips (f = E + S), with
+        # E <= max(0, m0 + base_miss + X - capacity) and X + S =
+        # touched-below-f.  So any reachable f satisfies
+        # f <= g(f) = max(0, base_miss - slack + #touched<f); g grows by
+        # <= 1 per position, so {f : f <= g(f)} is an interval [0, F] —
+        # find F by binary search.  Touched keys at positions >= F are
+        # certain hits.
+        lo, hi = 0, m0
+        while lo < hi:
+            mid = (lo + hi + 1) // 2
+            bound = base_miss - slack + int(np.searchsorted(tp, mid))
+            if mid <= max(0, bound):
+                lo = mid
+            else:
+                hi = mid - 1
+        n_risk = int(np.searchsorted(tp, lo))  # at-risk = tp[:n_risk]
+        extra = 0  # evicted-then-re-missed at-risk keys so far
+        evict_pos: list = []  # their positions, sorted
+        if n_risk:
+            ar = tp[:n_risk]
+            ar_ranks = pos[ar]
+            proc: list = []  # processed at-risk positions, sorted
+            for oi in np.argsort(ar_ranks).tolist():
+                q = int(ar[oi])
+                # evictions issued before this key's access vs the
+                # consumable positions the frontier must pass first:
+                # every position < q except touched keys hit before the
+                # frontier reached them
+                issued = int(base_cum[ar_ranks[oi]]) + extra - slack
+                avail = (
+                    q
+                    - bisect.bisect_left(proc, q)
+                    + bisect.bisect_left(evict_pos, q)
+                )
+                if issued >= avail + 1:
+                    extra += 1
+                    bisect.insort(evict_pos, q)
+                bisect.insort(proc, q)
+        n_miss = base_miss + extra
+        n_evict = max(0, m0 + n_miss - self.capacity)
+        # victims: the first n_evict candidate positions (untouched or
+        # evicted-at-risk); survivors keep relative order; batch ids land
+        # at the end in ascending order, same as the sequential walk over
+        # sorted unique ids
+        keep = ~touched
+        if n_evict:
+            cand = keep.copy()
+            if evict_pos:
+                cand[evict_pos] = True
+            keep[np.flatnonzero(cand)[:n_evict]] = False
+        self._keys = np.concatenate([keys[keep], ids])
+        self._store_stale = True
+        self.hits += n - n_miss
+        self.misses += n_miss
+        return n_miss
+
+    def _access_sequential(self, ids: np.ndarray) -> int:
+        """Exact reference walk (sorted unique valid ids pre-applied)."""
+        if self._store_stale:
+            self._store = OrderedDict.fromkeys(self._keys.tolist(), True)
+            self._store_stale = False
         miss_now = 0
         for v in ids.tolist():
             if v in self._store:
@@ -43,7 +155,16 @@ class LRUCache:
                 self._store[v] = True
                 if len(self._store) > self.capacity:
                     self._store.popitem(last=False)
+        self._keys = None  # the sequential walk reorders arbitrarily
         return miss_now
+
+    def lru_keys(self) -> np.ndarray:
+        """Resident keys in LRU order, oldest first (copy)."""
+        if self._keys is None:
+            self._keys = np.fromiter(
+                self._store.keys(), dtype=np.int64, count=len(self._store)
+            )
+        return self._keys.copy()
 
     @property
     def miss_rate(self) -> float:

@@ -50,6 +50,12 @@ class EngineConfig:
     seed: int = 0
     partition_seed: Optional[int] = None  # defaults to ``seed``
     capacity: CapacityPolicy = field(default_factory=CapacityPolicy)
+    # tiered feature store (repro.store): device CLOCK cache per PE in
+    # front of the host feature tier; None capacity defaults to V // 4
+    # rows at engine construction
+    feature_cache: bool = False
+    cache_capacity: Optional[int] = None  # rows per PE
+    cache_ways: int = 8
 
     def __post_init__(self):
         if self.mode not in MODES:
@@ -66,6 +72,10 @@ class EngineConfig:
             raise ValueError("num_pes, local_batch, num_layers must be >= 1")
         if self.schedule == "nested" and not self.kappa:
             raise ValueError("nested schedule requires a finite kappa >= 1")
+        if self.cache_ways < 1:
+            raise ValueError("cache_ways must be >= 1")
+        if self.cache_capacity is not None and self.cache_capacity < self.cache_ways:
+            raise ValueError("cache_capacity must be >= cache_ways")
 
     @property
     def global_batch(self) -> int:

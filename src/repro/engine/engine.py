@@ -45,6 +45,7 @@ from repro.core.samplers.base import Sampler, make_sampler
 from repro.engine.config import EngineConfig
 from repro.engine.plan import Plan
 from repro.engine.stream import MinibatchStream
+from repro.store.tiers import TieredFeatureStore
 
 
 @dataclass
@@ -59,6 +60,7 @@ class MinibatchEngine:
     part: Optional[Partition] = None        # cooperative only
     dataset: Optional[object] = None        # seeds come from train split if set
     store: Optional[FeatureStore] = None
+    tiered: Optional[TieredFeatureStore] = None  # device cache tier, optional
 
     # ------------------------------------------------------------------
     # Construction
@@ -92,9 +94,19 @@ class MinibatchEngine:
             )
             part, ex = None, None
         store = FeatureStore(dataset.features) if dataset is not None else None
+        tiered = None
+        if dataset is not None and cfg.feature_cache:
+            cap = cfg.cache_capacity
+            if cap is None:
+                cap = max(cfg.cache_ways, V // 4)
+            cap -= cap % cfg.cache_ways  # CLOCK sets need capacity % ways == 0
+            tiered = TieredFeatureStore(
+                dataset.features, capacity=cap, ways=cfg.cache_ways,
+                num_pes=cfg.num_pes,
+            )
         return cls(
             config=cfg, graph=graph, sampler=sampler, caps=caps, ex=ex,
-            part=part, dataset=dataset, store=store,
+            part=part, dataset=dataset, store=store, tiered=tiered,
         )
 
     # ------------------------------------------------------------------
@@ -216,6 +228,25 @@ class MinibatchEngine:
         return jax.vmap(build_one)(seeds)
 
     # ------------------------------------------------------------------
+    # Feature loading — through the tiered store when configured
+    # ------------------------------------------------------------------
+    def gather_features(self, plan: Plan) -> jax.Array:
+        """Input-layer embeddings ``H`` for ``plan``.
+
+        With ``feature_cache`` on, the gather runs through the device
+        CLOCK cache (bit-exact with the uncached path; misses fill from
+        the host tier).  Dependent κ schedules drive its hit rate — the
+        paper's §4.2 bandwidth saving, served rather than simulated.
+        """
+        if self.tiered is not None:
+            return self.tiered.gather(plan.input_ids)
+        if self.store is None:
+            raise ValueError(
+                "engine has no feature store; construct with a dataset"
+            )
+        return plan.gather_inputs(self.store)
+
+    # ------------------------------------------------------------------
     # Model application — the one remaining mode dispatch
     # ------------------------------------------------------------------
     def apply_model(self, params, gnn_cfg, plan: Plan, H: jax.Array) -> jax.Array:
@@ -241,8 +272,16 @@ class MinibatchEngine:
     # Streaming
     # ------------------------------------------------------------------
     def stream(
-        self, num_steps: int, start_step: int = 0, prefetch: int = 2
+        self,
+        num_steps: int,
+        start_step: int = 0,
+        prefetch: int = 2,
+        fetch_features: bool = False,
     ) -> MinibatchStream:
         """Iterator over ``(plan, rng, step)`` items with host-side
-        double-buffered prefetch (see :class:`MinibatchStream`)."""
-        return MinibatchStream(self, num_steps, start_step, prefetch)
+        double-buffered prefetch (see :class:`MinibatchStream`).
+        ``fetch_features`` loads input embeddings at dispatch time so
+        tiered-cache fills overlap with the previous step's compute."""
+        return MinibatchStream(
+            self, num_steps, start_step, prefetch, fetch_features
+        )

@@ -13,11 +13,13 @@ from __future__ import annotations
 
 from collections import deque
 from dataclasses import dataclass
-from typing import TYPE_CHECKING, Iterator
+from typing import TYPE_CHECKING, Iterator, Optional
 
 import numpy as np
 
 if TYPE_CHECKING:  # pragma: no cover - import cycle guard, typing only
+    import jax
+
     from repro.core.rng import DependentRNG
     from repro.engine.engine import MinibatchEngine
     from repro.engine.plan import Plan
@@ -31,6 +33,7 @@ class StreamItem:
     plan: "Plan"
     rng: "DependentRNG"
     seeds: np.ndarray  # (P, b) host-side seed rows
+    features: "Optional[jax.Array]" = None  # input-layer H when prefetched
 
 
 class MinibatchStream:
@@ -39,6 +42,12 @@ class MinibatchStream:
     ``prefetch=2`` is classic double buffering: while the consumer uses
     plan *i*, plan *i+1* is already dispatched.  ``prefetch=0`` degrades
     to fully synchronous iteration (useful for debugging).
+
+    ``fetch_features=True`` additionally loads the plan's input-layer
+    embeddings at dispatch time (through the engine's tiered store when
+    configured), so cache fills — host-tier fetches for cache misses —
+    overlap with the consumer's compute on the previous step instead of
+    stalling it.
     """
 
     def __init__(
@@ -47,6 +56,7 @@ class MinibatchStream:
         num_steps: int,
         start_step: int = 0,
         prefetch: int = 2,
+        fetch_features: bool = False,
     ):
         if num_steps < 0 or prefetch < 0:
             raise ValueError("num_steps and prefetch must be >= 0")
@@ -54,13 +64,17 @@ class MinibatchStream:
         self.num_steps = num_steps
         self.start_step = start_step
         self.prefetch = prefetch
+        self.fetch_features = fetch_features
 
     def _make(self, step: int) -> StreamItem:
         eng = self.engine
         seeds = eng.seed_batch(step)
         rng = eng.rng_at(step)
         plan = eng.build_plan(seeds, rng=rng)
-        return StreamItem(step=step, plan=plan, rng=rng, seeds=seeds)
+        feats = eng.gather_features(plan) if self.fetch_features else None
+        return StreamItem(
+            step=step, plan=plan, rng=rng, seeds=seeds, features=feats
+        )
 
     def __len__(self) -> int:
         return self.num_steps

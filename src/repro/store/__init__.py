@@ -1,0 +1,33 @@
+"""Tiered feature store: device CLOCK cache over a host feature tier.
+
+`repro.core.cache` keeps the *oracle* (exact host-side LRU, Fig. 5
+simulator); this package is the cache that actually serves features on
+the hot path — batched set-associative CLOCK lookup/eviction as device
+array ops, a host-memory slow tier, and fetch accounting compatible with
+``FeatureStore.count_fetched``.
+"""
+from repro.store.clock import (
+    ClockAccess,
+    ClockCache,
+    ClockState,
+    clock_access,
+    clock_init,
+    hash_set,
+    unique_rows,
+)
+from repro.store.kernel import probe_ref, tag_probe, tag_probe_pallas
+from repro.store.tiers import TieredFeatureStore
+
+__all__ = [
+    "ClockAccess",
+    "ClockCache",
+    "ClockState",
+    "TieredFeatureStore",
+    "clock_access",
+    "clock_init",
+    "hash_set",
+    "probe_ref",
+    "tag_probe",
+    "tag_probe_pallas",
+    "unique_rows",
+]

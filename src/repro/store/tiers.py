@@ -1,0 +1,157 @@
+"""Tiered feature store: device CLOCK cache over a host-memory tier.
+
+``FeatureStore`` keeps every feature row in one device array — fine for
+synthetic graphs, impossible for the paper's billion-edge regime.  The
+tiered store keeps the full table in *host* memory (the pinned-RAM tier;
+an on-disk tier would hang off the same fetch hook) and serves the hot
+path from a device-resident CLOCK cache (`repro.store.clock`):
+
+    gather(ids):
+      1. dedup ids per PE (device),
+      2. probe + CLOCK-update the cache (device, one fused jit),
+      3. fetch only the *missed* unique rows from the host tier,
+      4. assemble the output from cache hits + fresh fetches and admit
+         the fetched rows into their slots (device).
+
+Hit rows are read out of the cache data array *before* the new rows are
+scattered in, so a slot recycled within the same batch still serves the
+value it held at lookup time — output is bit-exact with the uncached
+``FeatureStore.gather`` in every mode.
+
+Accounting matches ``FeatureStore.count_fetched``: ``requested`` counts
+unique valid ids per PE-batch (exactly what ``count_fetched`` returns),
+``hits + misses == requested``, and ``fetched_rows`` (host counter) is
+the rows that actually crossed the host->device link — the β-bandwidth
+quantity of Table 1 that κ-scheduled dependent batches shrink (Fig. 5).
+
+Per-PE caches make the cooperative story concrete: with ownership
+partitioning upstream (the engine's cooperative seed rows), each PE only
+ever asks for *owned* vertices, so the P caches hold disjoint id sets —
+the "effectively P-fold global cache" of §4.3.1.
+"""
+from __future__ import annotations
+
+import jax
+import jax.numpy as jnp
+import numpy as np
+
+from repro.core.graph import INVALID
+from repro.store.clock import ClockState, clock_access, clock_init, unique_rows
+
+_INVALID_NP = np.int32(INVALID)
+
+
+@jax.jit
+def _assemble(data, acc, fetched, ids):
+    """Combine cache hits + host fetches into the output; admit fetches.
+
+    ``data``: (P, slots, d) cache rows.  ``fetched``: (P, n, d) host rows
+    aligned with ``acc.uniq`` (zeros at hits/padding).  Returns the
+    gathered (P, n_ids, d) output and the updated data tier.
+    """
+    P, nslots, d = data.shape
+    n = acc.uniq.shape[1]
+    # read hit rows BEFORE admitting this batch's fetches: a slot being
+    # recycled in this batch must serve its lookup-time value
+    cached = jax.vmap(lambda dp, s: dp[jnp.maximum(s, 0)])(data, acc.slot)
+    uniq_rows_ = jnp.where(acc.hit[..., None], cached, fetched)
+    tgt = jnp.where(acc.fill_slot >= 0, acc.fill_slot, nslots)
+    data = jax.vmap(lambda dp, t, r: dp.at[t].set(r, mode="drop"))(
+        data, tgt, fetched
+    )
+    # route every original id (duplicates included) to its unique row
+    pos = jax.vmap(jnp.searchsorted)(acc.uniq, ids)
+    out = jnp.take_along_axis(
+        uniq_rows_, jnp.clip(pos, 0, n - 1)[..., None], axis=1
+    )
+    out = jnp.where((ids != INVALID)[..., None], out, 0.0)
+    return out, data
+
+
+class TieredFeatureStore:
+    """Device CLOCK cache (tier 0) in front of a host feature table (tier 1).
+
+    Drop-in for ``FeatureStore.gather`` on the engine's hot path: same
+    masking semantics (INVALID rows come back as zeros), bit-exact rows,
+    plus hit/miss/fetch accounting.  ``capacity`` and the cache state are
+    *per PE*; pass ``num_pes > 1`` for stacked ``(P, n)`` id batches.
+    """
+
+    def __init__(
+        self,
+        features,
+        capacity: int,
+        ways: int = 8,
+        num_pes: int = 1,
+    ):
+        self.host = np.asarray(features)  # host-memory tier, never on device
+        if self.host.ndim != 2:
+            raise ValueError(f"features must be (V, d), got {self.host.shape}")
+        self.capacity = capacity
+        self.ways = ways
+        self.num_pes = num_pes
+        self.state: ClockState = clock_init(capacity, ways, num_pes)
+        d = self.host.shape[1]
+        self.data = jnp.zeros((num_pes, capacity, d), self.host.dtype)
+        self.fetched_rows = 0  # rows pulled across the host->device link
+        self.batches = 0
+
+    # -- FeatureStore-compatible surface -----------------------------------
+    def gather(self, ids) -> jax.Array:
+        """Masked gather through the cache; INVALID rows come back zero."""
+        ids_np = np.asarray(ids)
+        squeeze = ids_np.ndim == 1
+        if squeeze:
+            ids_np = ids_np[None]
+        if ids_np.ndim != 2 or ids_np.shape[0] != self.num_pes:
+            raise ValueError(
+                f"expected ({self.num_pes}, n) ids, got shape {ids_np.shape}"
+            )
+        ids_j = jnp.asarray(ids_np, jnp.int32)
+        self.state, acc = clock_access(self.state, unique_rows(ids_j))
+
+        # slow tier: fetch only the missed unique rows (host-side gather —
+        # this is the prefetch/dispatch path, not jitted device code)
+        uniq_np = np.asarray(acc.uniq)
+        missed = (uniq_np != _INVALID_NP) & ~np.asarray(acc.hit)
+        V = self.host.shape[0]
+        fetched = np.zeros(uniq_np.shape + (self.host.shape[1],), self.host.dtype)
+        safe = np.clip(uniq_np, 0, V - 1)
+        fetched[missed] = self.host[safe[missed]]
+        self.fetched_rows += int(missed.sum())
+        self.batches += 1
+
+        out, self.data = _assemble(
+            self.data, acc, jnp.asarray(fetched), ids_j
+        )
+        return out[0] if squeeze else out
+
+    # -- accounting ---------------------------------------------------------
+    @property
+    def hits(self) -> int:
+        return int(self.state.hits.sum())
+
+    @property
+    def misses(self) -> int:
+        return int(self.state.misses.sum())
+
+    @property
+    def requested(self) -> int:
+        """Unique valid ids requested — ``FeatureStore.count_fetched`` sums."""
+        return int(self.state.requested.sum())
+
+    @property
+    def hit_rate(self) -> float:
+        total = self.hits + self.misses
+        return self.hits / total if total else 0.0
+
+    @property
+    def miss_rate(self) -> float:
+        total = self.hits + self.misses
+        return self.misses / total if total else 0.0
+
+    def reset_stats(self) -> None:
+        z = jnp.zeros((self.num_pes,), jnp.int32)
+        self.state = self.state._replace(hits=z, misses=z, requested=z)
+        self.fetched_rows = 0
+        self.batches = 0

@@ -1,0 +1,119 @@
+"""Property tests for ``FeatureStore`` fetch accounting.
+
+Runs under the ``tests/_hypothesis_compat`` shim: with hypothesis
+installed the ``@given`` tests fuzz the invariants; without it they skip
+and the plain unit tests below still pin the same properties on fixed
+inputs.
+"""
+import numpy as np
+import pytest
+
+import jax.numpy as jnp
+
+from repro.core.feature_loader import FeatureStore
+from repro.core.graph import INVALID
+from tests._hypothesis_compat import given, settings, strategies as st
+
+V, D = 64, 5
+
+
+@pytest.fixture(scope="module")
+def store():
+    rng = np.random.default_rng(0)
+    return FeatureStore(jnp.asarray(rng.normal(size=(V, D)).astype(np.float32)))
+
+
+ids_1d = st.lists(
+    st.integers(min_value=0, max_value=V - 1), min_size=0, max_size=40
+).map(lambda xs: np.asarray(xs, np.int32))
+mask_positions = st.lists(
+    st.integers(min_value=0, max_value=39), min_size=0, max_size=10
+)
+
+
+# ---------------------------------------------------------------------------
+# hypothesis properties
+# ---------------------------------------------------------------------------
+@given(ids=ids_1d, masked=mask_positions)
+@settings(max_examples=50, deadline=None)
+def test_invalid_rows_gather_to_zero(ids, masked):
+    rng = np.random.default_rng(1)
+    store = FeatureStore(jnp.asarray(rng.normal(size=(V, D)).astype(np.float32)))
+    ids = ids.copy()
+    for p in masked:
+        if p < len(ids):
+            ids[p] = np.int32(INVALID)
+    out = np.asarray(store.gather(jnp.asarray(ids)))
+    assert out.shape == (len(ids), D)
+    invalid = ids == np.int32(INVALID)
+    assert np.all(out[invalid] == 0.0)
+    valid_feats = np.asarray(store.features)[ids[~invalid]]
+    assert np.array_equal(out[~invalid], valid_feats)
+
+
+@given(ids=ids_1d, seed=st.integers(min_value=0, max_value=2**31 - 1))
+@settings(max_examples=50, deadline=None)
+def test_count_fetched_permutation_and_padding_invariant(ids, seed):
+    rng = np.random.default_rng(seed)
+    store = FeatureStore(jnp.zeros((V, D), jnp.float32))
+    base = store.count_fetched(ids)
+    assert store.count_fetched(rng.permutation(ids)) == base
+    padded = np.concatenate([ids, np.full(3, np.int32(INVALID))])
+    assert store.count_fetched(rng.permutation(padded)) == base
+    # duplicating entries never changes the unique-row fetch count
+    assert store.count_fetched(np.concatenate([ids, ids])) == base
+
+
+@given(
+    rows=st.lists(ids_1d, min_size=1, max_size=4).filter(
+        lambda rs: len({len(r) for r in rs}) == 1
+    )
+)
+@settings(max_examples=50, deadline=None)
+def test_duplicates_across_pes_nonnegative(rows):
+    store = FeatureStore(jnp.zeros((V, D), jnp.float32))
+    per_pe = np.stack(rows)
+    dup = store.count_duplicates_across_pes(per_pe)
+    assert dup >= 0
+    # per-PE unique sum decomposes as global unique + duplicates
+    assert store.count_fetched(per_pe) == dup + int(
+        (np.unique(per_pe.ravel()) != INVALID).sum()
+    )
+
+
+@given(seed=st.integers(min_value=0, max_value=2**31 - 1))
+@settings(max_examples=25, deadline=None)
+def test_disjoint_partitions_have_zero_duplicates(seed):
+    rng = np.random.default_rng(seed)
+    store = FeatureStore(jnp.zeros((V, D), jnp.float32))
+    P = 4
+    # ownership partition: row p gets only ids ≡ p (mod P)
+    per_pe = np.stack(
+        [rng.choice(V // P, 8, replace=False) * P + p for p in range(P)]
+    )
+    assert store.count_duplicates_across_pes(per_pe) == 0
+
+
+# ---------------------------------------------------------------------------
+# plain pins (always run, even without hypothesis)
+# ---------------------------------------------------------------------------
+def test_invalid_masking_fixed(store):
+    ids = jnp.asarray([3, INVALID, 7], jnp.int32)
+    out = np.asarray(store.gather(ids))
+    assert np.all(out[1] == 0.0)
+    assert np.array_equal(out[0], np.asarray(store.features)[3])
+    assert np.array_equal(out[2], np.asarray(store.features)[7])
+
+
+def test_count_fetched_fixed(store):
+    ids = np.asarray([5, 5, 9, INVALID, 9, 2], np.int32)
+    assert store.count_fetched(ids) == 3
+    # 2-D counts per PE row, then sums
+    assert store.count_fetched(np.stack([ids, ids])) == 6
+
+
+def test_duplicates_fixed(store):
+    per_pe = np.asarray([[1, 2, 3], [3, 4, 5]], np.int32)
+    assert store.count_duplicates_across_pes(per_pe) == 1
+    disjoint = np.asarray([[1, 2, 3], [4, 5, 6]], np.int32)
+    assert store.count_duplicates_across_pes(disjoint) == 0
