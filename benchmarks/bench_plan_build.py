@@ -1,0 +1,115 @@
+"""Plan-construction throughput: device-resident pipeline vs host baseline.
+
+Sweeps (batch x fanout x layers) for both engine modes and times three
+pipelines per shape:
+
+* ``host/reference``  — the sort-based baseline this PR replaces: host
+  seed batch (``seed_batch`` round-trips through numpy) + eagerly
+  dispatched ``build_plan`` every step, exactly how the stream drove
+  plan construction before ``plan_at``;
+* ``device/reference`` — one end-to-end compiled ``plan_at`` step, still
+  on the ``unique_padded``/``searchsorted`` frontier algebra;
+* ``device/fused``     — ``plan_at`` on ``plan_backend="fused"``: the
+  unique-compact / frontier-gather / expand-indptr ops (Pallas on TPU,
+  their fused jnp oracles elsewhere).
+
+Writes ``BENCH_plan_build.json`` with per-row times and a ``speedups``
+map (host-baseline ms / device-fused ms per shape — the headline the
+tentpole claims) plus ``backend_ratio`` (device reference / fused, the
+axis the Pallas kernels move on TPU).  CI gates on the ``speedups`` map
+via ``benchmarks/compare_snapshots.py``; ratios are machine-relative so
+the gate survives runner variance better than raw milliseconds.
+"""
+from __future__ import annotations
+
+import json
+import time
+
+import jax
+
+from benchmarks.common import Csv, bench_graph
+from repro.engine import EngineConfig, MinibatchEngine
+
+# (global batch, fanout, layers)
+SHAPES = [(64, 5, 2), (256, 5, 2), (256, 10, 2), (128, 10, 3)]
+MODES = [("independent", 1), ("cooperative", 4)]
+STEPS = 8
+OUT_JSON = "BENCH_plan_build.json"
+
+
+def _engine(g, backend, mode, num_pes, batch, fanout, layers):
+    cfg = EngineConfig(
+        mode=mode, num_pes=num_pes, local_batch=batch // num_pes,
+        num_layers=layers, fanout=fanout, sampler="labor0",
+        schedule="smoothed", kappa=4, seed=0, plan_backend=backend,
+    )
+    return MinibatchEngine.from_config(g, cfg)
+
+
+def _time_host(eng) -> float:
+    """Legacy per-step dispatch: host seeds + eager build_plan."""
+    plan = eng.build_plan(eng.seed_batch(0), rng=eng.rng_state(0))
+    jax.block_until_ready(plan)
+    t0 = time.perf_counter()
+    for s in range(STEPS):
+        plan = eng.build_plan(eng.seed_batch(s), rng=eng.rng_state(s))
+    jax.block_until_ready(plan)
+    return (time.perf_counter() - t0) / STEPS * 1e3
+
+
+def _time_device(eng) -> float:
+    """One compiled plan_at step, seeds drawn on device."""
+    jax.block_until_ready(eng.plan_at(0))
+    t0 = time.perf_counter()
+    for s in range(STEPS):
+        plan = eng.plan_at(s)
+    jax.block_until_ready(plan)
+    return (time.perf_counter() - t0) / STEPS * 1e3
+
+
+def run(fast: bool = False) -> Csv:
+    g = bench_graph()
+    shapes = SHAPES[:2] if fast else SHAPES
+    csv = Csv(["mode", "batch", "fanout", "layers", "pipeline", "backend",
+               "ms_per_step"])
+    payload = {
+        "graph": {"V": g.num_vertices, "E": g.num_edges},
+        "steps": STEPS,
+        "backend": jax.default_backend(),
+        "rows": [],
+        "speedups": {},       # host sort-based baseline / device fused
+        "backend_ratio": {},  # device reference / device fused
+    }
+    for mode, num_pes in MODES:
+        for batch, fanout, layers in shapes:
+            key = f"{mode}/b{batch}_f{fanout}_l{layers}"
+            eng_ref = _engine(g, "reference", mode, num_pes, batch, fanout,
+                              layers)
+            eng_fus = _engine(g, "fused", mode, num_pes, batch, fanout,
+                              layers)
+            times = {
+                ("host", "reference"): _time_host(eng_ref),
+                ("device", "reference"): _time_device(eng_ref),
+                ("device", "fused"): _time_device(eng_fus),
+            }
+            for (pipeline, backend), ms in times.items():
+                csv.add(mode, batch, fanout, layers, pipeline, backend,
+                        round(ms, 3))
+                payload["rows"].append({
+                    "mode": mode, "batch": batch, "fanout": fanout,
+                    "layers": layers, "pipeline": pipeline,
+                    "backend": backend, "ms_per_step": round(ms, 4),
+                })
+            payload["speedups"][key] = round(
+                times[("host", "reference")] / times[("device", "fused")], 3
+            )
+            payload["backend_ratio"][key] = round(
+                times[("device", "reference")] / times[("device", "fused")],
+                3,
+            )
+    with open(OUT_JSON, "w") as f:
+        json.dump(payload, f, indent=2, sort_keys=True)
+    worst = min(payload["speedups"].items(), key=lambda kv: kv[1])
+    print(f"# plan_build: fused-vs-baseline speedup min {worst[1]}x "
+          f"({worst[0]}) -> {OUT_JSON}", flush=True)
+    return csv

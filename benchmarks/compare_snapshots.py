@@ -1,0 +1,93 @@
+"""Gate a benchmark snapshot against a committed baseline.
+
+    PYTHONPATH=src python -m benchmarks.compare_snapshots \
+        benchmarks/baselines/BENCH_plan_build.json BENCH_plan_build.json \
+        --metrics speedups --threshold 0.10
+
+Reads the dict of numbers at ``--metrics`` (a dotted path) in both
+files, intersects their keys, and exits non-zero if any current value
+fell more than ``--threshold`` (fractional) below the baseline.  Higher
+is assumed better (speedup ratios, hit rates); pass ``--lower-better``
+for latency-style metrics where a *rise* is the regression.
+
+Keys present on only one side are reported but never fail the gate —
+baselines age as sweeps grow, and a new shape has nothing to regress
+against.
+"""
+from __future__ import annotations
+
+import argparse
+import json
+import sys
+
+
+def _dig(payload: dict, path: str) -> dict:
+    node = payload
+    for part in path.split("."):
+        if not isinstance(node, dict) or part not in node:
+            raise KeyError(f"no '{path}' in snapshot (missing '{part}')")
+        node = node[part]
+    if not isinstance(node, dict):
+        raise KeyError(f"'{path}' is not a metrics dict")
+    return {k: float(v) for k, v in node.items()
+            if isinstance(v, (int, float))}
+
+
+def compare(baseline: dict, current: dict, threshold: float,
+            lower_better: bool = False):
+    """-> (regressions, improvements, only_in_one) over intersecting keys."""
+    regressions, improvements, skipped = [], [], []
+    for key in sorted(set(baseline) | set(current)):
+        if key not in baseline or key not in current:
+            skipped.append(key)
+            continue
+        base, cur = baseline[key], current[key]
+        if base == 0:
+            skipped.append(key)
+            continue
+        change = (cur - base) / abs(base)
+        regressed = change > threshold if lower_better else change < -threshold
+        (regressions if regressed else improvements).append(
+            (key, base, cur, change)
+        )
+    return regressions, improvements, skipped
+
+
+def main(argv=None) -> int:
+    ap = argparse.ArgumentParser(description=__doc__.splitlines()[0])
+    ap.add_argument("baseline")
+    ap.add_argument("current")
+    ap.add_argument("--metrics", default="speedups",
+                    help="dotted path to the {key: number} dict to gate on")
+    ap.add_argument("--threshold", type=float, default=0.10,
+                    help="allowed fractional regression (default 0.10)")
+    ap.add_argument("--lower-better", action="store_true",
+                    help="treat a rise (not a fall) as the regression")
+    args = ap.parse_args(argv)
+
+    with open(args.baseline) as f:
+        base = _dig(json.load(f), args.metrics)
+    with open(args.current) as f:
+        cur = _dig(json.load(f), args.metrics)
+
+    regressions, improvements, skipped = compare(
+        base, cur, args.threshold, args.lower_better
+    )
+    for key, b, c, change in improvements:
+        print(f"ok   {key}: {b} -> {c} ({change:+.1%})")
+    for key in skipped:
+        print(f"skip {key}: present in only one snapshot")
+    for key, b, c, change in regressions:
+        print(f"FAIL {key}: {b} -> {c} ({change:+.1%}, "
+              f"threshold {args.threshold:.0%})", file=sys.stderr)
+    if regressions:
+        print(f"{len(regressions)} metric(s) regressed beyond "
+              f"{args.threshold:.0%}", file=sys.stderr)
+        return 1
+    print(f"{len(improvements)} metric(s) within threshold, "
+          f"{len(skipped)} skipped")
+    return 0
+
+
+if __name__ == "__main__":
+    raise SystemExit(main())

@@ -6,6 +6,7 @@ Sections:
     monotonicity   Fig 3/6  (Thm 3.1/3.2 work curves per sampler)
     density        Thm 3.3  (induced-subgraph density vs batch)
     cache_kappa    Fig 5a/5b + Table 6 (LRU miss vs dependency kappa)
+    plan_build     device-resident plan_at vs sort-based host baseline
     feature_store  Fig 5 shape through the device CLOCK tier (+ oracle gap)
     coop_vs_indep  Tables 4/5/7 (per-PE counts + bandwidth-model times)
     convergence    Fig 4/9  (coop vs indep; kappa parity)
@@ -82,6 +83,7 @@ def main() -> None:
         bench_feature_store,
         bench_kernels,
         bench_monotonicity,
+        bench_plan_build,
         bench_roofline,
     )
 
@@ -90,6 +92,7 @@ def main() -> None:
     register("cache_kappa", lambda: bench_cache_kappa.run(coop=not args.fast))
     register("feature_store", lambda: bench_feature_store.run(
         coop=not args.fast, fast=args.fast))
+    register("plan_build", lambda: bench_plan_build.run(fast=args.fast))
     register("coop_vs_indep", bench_coop_vs_indep.run)
     register("convergence", bench_convergence.run)
     register("kernels", bench_kernels.run)

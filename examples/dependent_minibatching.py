@@ -35,6 +35,8 @@ for kappa in (1, 16, 64, None):
         ),
     )
     cache = LRUCache(capacity=graph.num_vertices // 2)
+    # stream() drives eng.plan_at(step) under the hood: seed draw, RNG
+    # schedule and sampling run as one device-resident program per step
     for item in eng.stream(num_steps=20):
         cache.access_batch(np.asarray(item.plan.input_ids).ravel())
     print(f"kappa={str(kappa):>4s}  LRU miss rate = {cache.miss_rate:.3f}")

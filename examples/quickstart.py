@@ -27,12 +27,12 @@ cfg = EngineConfig(
 
 # --- independent: P PEs, each with its own batch of size B_LOCAL ---
 eng_i = MinibatchEngine.from_config(graph, cfg)
-plan_i = eng_i.build_plan(eng_i.seed_batch(0))
+plan_i = eng_i.plan_at(0)  # seed draw + RNG + sampling, one jitted program
 indep_inputs = int(plan_i.num_inputs)  # total rows fetched across all PEs
 
 # --- cooperative: ONE global batch of size P*B_LOCAL, owner-partitioned ---
 eng_c = MinibatchEngine.from_config(graph, cfg.with_mode("cooperative"))
-plan_c = eng_c.build_plan(eng_c.seed_batch(0))
+plan_c = eng_c.plan_at(0)
 coop_inputs = P * plan_c.stats()["inputs"]  # upper bound: max-per-PE * P
 
 print(f"independent total feature rows fetched : {indep_inputs}")

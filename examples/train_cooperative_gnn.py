@@ -34,6 +34,10 @@ def main():
                     choices=["iid", "smoothed", "nested"])
     ap.add_argument("--kappa", type=int, default=16)
     ap.add_argument("--sampler", default="labor0")
+    ap.add_argument("--plan-backend", default="reference",
+                    choices=["reference", "fused"],
+                    help="frontier lowering: jnp algebra or fused Pallas "
+                         "kernels (bit-identical plans)")
     ap.add_argument("--out", default="/tmp/coop_gnn_ckpt")
     args = ap.parse_args()
 
@@ -45,6 +49,7 @@ def main():
         mode=args.mode, num_pes=args.pes, local_batch=64,
         num_steps=args.steps, fanout=10, schedule=args.schedule,
         kappa=args.kappa, sampler=args.sampler,
+        plan_backend=args.plan_backend,
         eval_every=max(args.steps // 6, 1),
     )
     t0 = time.time()

@@ -109,10 +109,58 @@ def repo_targets() -> List[KernelTarget]:
         ids = jnp.zeros((512,), jnp.int32)
         return (tags, sets, ids), dict(block_n=512, page=1024)
 
+    def uniq_args():
+        ids = jnp.zeros((1024,), jnp.int32)
+        return (ids, 512), dict(block_m=256)
+
+    def uniq_bad():
+        ids = jnp.zeros((1000,), jnp.int32)  # 1000 % 256 != 0
+        return (ids, 512), dict(block_m=256)
+
+    def uniq_bad_cap():
+        ids = jnp.zeros((1024,), jnp.int32)
+        return (ids, 0), dict(block_m=256)  # cap must be >= 1
+
+    def frontier_args():
+        indptr = jnp.zeros((4097,), jnp.int32)
+        indices = jnp.zeros((8192,), jnp.int32)
+        seeds = jnp.zeros((512,), jnp.int32)
+        return (indptr, indices, seeds), dict(
+            max_degree=16, block_n=256, page=2048,
+        )
+
+    def frontier_bad():
+        indptr = jnp.zeros((4097,), jnp.int32)
+        indices = jnp.zeros((8000,), jnp.int32)  # 8000 % 2048 != 0
+        seeds = jnp.zeros((512,), jnp.int32)
+        return (indptr, indices, seeds), dict(
+            max_degree=16, block_n=256, page=2048,
+        )
+
+    def expand_args():
+        indptr = jnp.zeros((257,), jnp.int32)
+        return (indptr, 4096), dict(block_e=512)
+
+    def expand_bad():
+        indptr = jnp.zeros((257,), jnp.int32)
+        return (indptr, 4000), dict(block_e=512)  # 4000 % 512 != 0
+
     return [
         KernelTarget(
             "gather", "repro.kernels.gather.kernel", "paged_gather_pallas",
             gather_args, [gather_bad],
+        ),
+        KernelTarget(
+            "unique_compact", "repro.kernels.unique_compact.kernel",
+            "unique_compact_pallas", uniq_args, [uniq_bad, uniq_bad_cap],
+        ),
+        KernelTarget(
+            "frontier_gather", "repro.kernels.frontier_gather.kernel",
+            "frontier_gather_pallas", frontier_args, [frontier_bad],
+        ),
+        KernelTarget(
+            "expand_indptr", "repro.kernels.expand_indptr.kernel",
+            "expand_indptr_pallas", expand_args, [expand_bad],
         ),
         KernelTarget(
             "spmm", "repro.kernels.spmm.kernel", "spmm_pallas",

@@ -162,8 +162,43 @@ def _engine_entry() -> TraceEntry:
     )
 
 
+def _plan_at_entry() -> TraceEntry:
+    def build():
+        import jax.numpy as jnp
+
+        from repro.engine import EngineConfig, MinibatchEngine
+
+        g = _tiny_graph()
+        engine = MinibatchEngine.from_config(
+            g,
+            EngineConfig(
+                mode="independent", num_pes=2, local_batch=8, num_layers=2,
+                sampler="labor0", fanout=4, schedule="nested", kappa=4,
+                plan_backend="fused",
+            ),
+        )
+
+        def fn(step):
+            # device-resident plan construction: the hash-permutation seed
+            # draw + plan build must compile once and serve every step,
+            # including the dynamic within-group sub-batch slice
+            return engine.plan_at(step)
+
+        return fn, (), [
+            lambda: ((jnp.int32(0),), {}),
+            lambda: ((jnp.int32(1),), {}),
+            lambda: ((jnp.int32(7),), {}),  # crosses into the next group
+        ]
+
+    return TraceEntry(
+        "engine.plan_at[nested]", "src/repro/engine/engine.py", build
+    )
+
+
 def default_entries() -> List[TraceEntry]:
-    return _kernel_entries() + [_graph_entry(), _engine_entry()]
+    return _kernel_entries() + [
+        _graph_entry(), _engine_entry(), _plan_at_entry(),
+    ]
 
 
 def run_trace(entries: Iterable[TraceEntry] = None) -> List[Finding]:

@@ -58,6 +58,7 @@ __all__ = [
     "CooperativeCacheArray",
     "FeatureStore",
     # engine facade (lazy re-exports, see __getattr__)
+    "CacheConfig",
     "CapacityPolicy",
     "EngineConfig",
     "MinibatchEngine",
@@ -67,6 +68,7 @@ __all__ = [
 ]
 
 _ENGINE_EXPORTS = {
+    "CacheConfig",
     "CapacityPolicy",
     "EngineConfig",
     "MinibatchEngine",

@@ -237,11 +237,13 @@ def build_cooperative_minibatch(
     num_layers: int,
     caps: CoopCapacityPlan,
     ex: Executor,
+    backend: str = "reference",
 ) -> CoopMinibatch:
+    frontier._check_backend(backend)
     P = ex.num_pes
 
     def local_seeds(s):
-        return frontier.unique_padded(s, caps.caps[0])
+        return frontier.unique_compact(s, caps.caps[0], backend=backend)
 
     S_l = ex.pe(local_seeds, seeds)
     layers = []
@@ -250,11 +252,10 @@ def build_cooperative_minibatch(
 
         def sample_and_bucket(S):
             ls = sampler.sample_layer(graph, S, rng, l)
-            tilde = frontier.unique_padded(
-                jnp.concatenate([S, ls.nbr.reshape(-1)]), cap_t
-            )
-            nbr_idx = frontier.lookup(tilde, ls.nbr)
-            self_idx = frontier.lookup(tilde, S)
+            cat = jnp.concatenate([S, ls.nbr.reshape(-1)])
+            tilde, inv = frontier.unique_with_inverse(cat, cap_t, backend=backend)
+            self_idx = inv[: S.shape[0]]
+            nbr_idx = inv[S.shape[0]:].reshape(ls.nbr.shape)
             owners = part.owner_of(tilde)
             bucket_ids, slot_to_tilde = _bucketize(tilde, owners, P, cap_b)
             return ls, tilde, nbr_idx, self_idx, bucket_ids, slot_to_tilde
@@ -265,14 +266,14 @@ def build_cooperative_minibatch(
         req = ex.exchange(bucket_ids)  # ids owned here, requested per peer
 
         def next_frontier(req):
-            return frontier.unique_padded(req.reshape(-1), cap_next)
+            # one fused dedup resolves BOTH the next owned frontier and
+            # every peer request slot — the separate lookup pass is gone
+            S_next, inv = frontier.unique_with_inverse(
+                req.reshape(-1), cap_next, backend=backend
+            )
+            return S_next, inv.reshape(req.shape)
 
-        S_next = ex.pe(next_frontier, req)
-
-        def resolve(S_next, req):
-            return frontier.lookup(S_next, req)
-
-        req_idx = ex.pe(resolve, S_next, req)
+        S_next, req_idx = ex.pe(next_frontier, req)
         layers.append(
             CoopLayer(
                 seeds=S_l,

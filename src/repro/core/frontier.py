@@ -42,6 +42,47 @@ def union_padded(a: jax.Array, b: jax.Array, cap: int) -> jax.Array:
     return unique_padded(jnp.concatenate([a.reshape(-1), b.reshape(-1)]), cap)
 
 
+PLAN_BACKENDS = ("reference", "fused")
+
+
+def _check_backend(backend: str) -> None:
+    if backend not in PLAN_BACKENDS:
+        raise ValueError(
+            f"unknown plan backend {backend!r}; expected one of {PLAN_BACKENDS}"
+        )
+
+
+def unique_with_inverse(
+    ids: jax.Array, cap: int, backend: str = "reference"
+) -> tuple[jax.Array, jax.Array]:
+    """(uniq (cap,), inv (m,)): dedup + rank of every id in the result.
+
+    ``uniq`` equals :func:`unique_padded` and ``inv`` equals
+    :func:`lookup` of the flattened input against it — both backends are
+    bit-identical; ``"fused"`` routes through the
+    :mod:`repro.kernels.unique_compact` sweep (one pass over sorted data
+    instead of ``jnp.unique`` plus two ``searchsorted``).
+    """
+    _check_backend(backend)
+    flat = ids.reshape(-1)
+    if backend == "fused":
+        from repro import kernels
+
+        return kernels.unique_with_inverse(flat, cap)
+    uniq = unique_padded(flat, cap)
+    return uniq, lookup(uniq, flat)
+
+
+def unique_compact(ids: jax.Array, cap: int, backend: str = "reference") -> jax.Array:
+    """Backend-dispatched :func:`unique_padded` (no inverse)."""
+    _check_backend(backend)
+    if backend == "fused":
+        from repro import kernels
+
+        return kernels.unique_compact(ids.reshape(-1), cap)
+    return unique_padded(ids, cap)
+
+
 @jax.jit
 def count_valid(ids: jax.Array) -> jax.Array:
     return jnp.sum(ids != INVALID)

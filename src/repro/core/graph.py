@@ -180,15 +180,26 @@ class Graph:
             num_edge_types=int(num_edge_types),
         )
 
-    def neighbor_table(self, seeds: jax.Array) -> tuple[jax.Array, jax.Array]:
+    def neighbor_table(
+        self, seeds: jax.Array, backend: str = "reference"
+    ) -> tuple[jax.Array, jax.Array]:
         """Gather the (padded) in-neighborhoods of ``seeds``.
 
         Args:
           seeds: (n,) int32 vertex ids, INVALID-padded.
+          backend: "reference" (jnp gather) or "fused" (the paged
+            :mod:`repro.kernels.frontier_gather` Pallas sweep on TPU) —
+            bit-identical outputs.
         Returns:
           nbr:  (n, max_degree) int32 source ids, INVALID where padded.
           mask: (n, max_degree) bool validity.
         """
+        if backend == "fused":
+            from repro import kernels
+
+            return kernels.frontier_gather(
+                self.indptr, self.indices, seeds, self.max_degree
+            )
         return _neighbor_table(self.indptr, self.indices, seeds, self.max_degree)
 
     def neighbor_edge_types(self, seeds: jax.Array) -> jax.Array:

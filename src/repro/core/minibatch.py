@@ -132,19 +132,24 @@ def build_minibatch(
     rng: DependentRNG,
     num_layers: int,
     caps: CapacityPlan,
+    backend: str = "reference",
 ) -> Minibatch:
-    """Sample an L-layer minibatch plan (independent path, Fig. 7a)."""
-    S_l = frontier.unique_padded(seeds, caps[0])
+    """Sample an L-layer minibatch plan (independent path, Fig. 7a).
+
+    ``backend`` selects how the frontier hot loop lowers: ``"reference"``
+    is the jnp sort/searchsorted algebra, ``"fused"`` routes dedup + rank
+    resolution through one :func:`repro.core.frontier.unique_with_inverse`
+    sweep (Pallas on TPU).  Outputs are bit-identical.
+    """
+    frontier._check_backend(backend)
+    S_l = frontier.unique_compact(seeds, caps[0], backend=backend)
     layers = []
     for l in range(num_layers):
         ls = sampler.sample_layer(graph, S_l, rng, l)
-        S_next = frontier.union_padded(
-            jnp.concatenate([S_l, ls.nbr.reshape(-1)]),
-            jnp.asarray([], dtype=S_l.dtype),
-            caps[l + 1],
-        )
-        nbr_idx = frontier.lookup(S_next, ls.nbr)
-        self_idx = frontier.lookup(S_next, S_l)
+        cat = jnp.concatenate([S_l, ls.nbr.reshape(-1)])
+        S_next, inv = frontier.unique_with_inverse(cat, caps[l + 1], backend=backend)
+        self_idx = inv[: S_l.shape[0]]
+        nbr_idx = inv[S_l.shape[0]:].reshape(ls.nbr.shape)
         layers.append(
             MinibatchLayer(
                 seeds=S_l,
@@ -156,6 +161,45 @@ def build_minibatch(
         )
         S_l = S_next
     return Minibatch(layers=tuple(layers), input_ids=S_l, seed_ids=layers[0].seeds)
+
+
+def layer_to_coo(
+    layer: MinibatchLayer,
+    cap_edges: int,
+    backend: str = "reference",
+) -> tuple[jax.Array, jax.Array, jax.Array]:
+    """Padded COO view of one bipartite block for plan-local assembly.
+
+    Returns ``(rows, cols, indptr)``: ``indptr`` (cap_l+1,) counts valid
+    edges per dst row; ``rows[e]``/``cols[e]`` give the dst row and the
+    src position (into ``S^{l+1}``) of edge slot ``e`` in row-major mask
+    order, ``-1`` past the total edge count.  Edges beyond ``cap_edges``
+    are dropped deterministically (callers size ``cap_edges`` at
+    ``cap_l * row_width`` so this never fires).
+    """
+    frontier._check_backend(backend)
+    counts = jnp.sum(layer.mask, axis=1).astype(jnp.int32)
+    indptr = jnp.concatenate(
+        [jnp.zeros((1,), jnp.int32), jnp.cumsum(counts).astype(jnp.int32)]
+    )
+    if backend == "fused":
+        from repro import kernels
+
+        rows = kernels.expand_indptr(indptr, cap_edges)
+    else:
+        from repro.kernels.expand_indptr.ref import expand_indptr_ref
+
+        rows = expand_indptr_ref(indptr, cap_edges)
+    pos = jnp.cumsum(layer.mask, axis=1).astype(jnp.int32) - 1
+    flat = indptr[:-1, None] + pos
+    flat = jnp.where(layer.mask & (flat < cap_edges), flat, cap_edges)
+    cols = (
+        jnp.full((cap_edges + 1,), -1, jnp.int32)
+        .at[flat.reshape(-1)]
+        .set(jnp.where(layer.mask, layer.nbr_idx, -1).reshape(-1))[:cap_edges]
+    )
+    rows = jnp.where(cols >= 0, rows, -1)
+    return rows, cols, indptr
 
 
 def epoch_stats(mb: Minibatch) -> dict:

@@ -13,6 +13,7 @@ from repro.core.samplers.base import LayerSample
 @dataclass(frozen=True)
 class FullSampler:
     name: str = "full"
+    backend: str = "reference"  # neighbor_table backend ("reference"|"fused")
 
     def row_width(self, graph: Graph) -> int:
         return graph.max_degree
@@ -20,7 +21,7 @@ class FullSampler:
     def sample_layer(
         self, graph: Graph, seeds: jax.Array, rng: DependentRNG, layer: int
     ) -> LayerSample:
-        nbr, mask = graph.neighbor_table(seeds)
+        nbr, mask = graph.neighbor_table(seeds, backend=self.backend)
         etypes = (
             graph.neighbor_edge_types(seeds) if graph.edge_types is not None else None
         )

@@ -42,6 +42,7 @@ def importance_probs(graph: Graph) -> jax.Array:
 class LaborSampler:
     fanout: int = 10
     importance: bool = False  # False -> LABOR-0, True -> LABOR-*
+    backend: str = "reference"  # neighbor_table backend ("reference"|"fused")
 
     @property
     def name(self) -> str:
@@ -53,7 +54,7 @@ class LaborSampler:
     def sample_layer(
         self, graph: Graph, seeds: jax.Array, rng: DependentRNG, layer: int
     ) -> LayerSample:
-        nbr, mask = graph.neighbor_table(seeds)
+        nbr, mask = graph.neighbor_table(seeds, backend=self.backend)
         deg = jnp.sum(mask, axis=1).astype(jnp.float32)
         r = rng.vertex_uniform(nbr, salt=layer)  # shared r_t across the batch
         if not self.importance:

@@ -26,6 +26,7 @@ from repro.core.samplers.base import LayerSample
 class NeighborSampler:
     fanout: int = 10
     name: str = "ns"
+    backend: str = "reference"  # neighbor_table backend ("reference"|"fused")
 
     def row_width(self, graph: Graph) -> int:
         return min(self.fanout, graph.max_degree)
@@ -33,7 +34,7 @@ class NeighborSampler:
     def sample_layer(
         self, graph: Graph, seeds: jax.Array, rng: DependentRNG, layer: int
     ) -> LayerSample:
-        nbr_full, mask_full = graph.neighbor_table(seeds)
+        nbr_full, mask_full = graph.neighbor_table(seeds, backend=self.backend)
         seeds_b = jnp.broadcast_to(seeds[:, None], nbr_full.shape)
         keys = rng.edge_uniform(nbr_full, seeds_b, salt=layer)
         k = self.row_width(graph)

@@ -29,6 +29,9 @@ class RandomWalkSampler:
     restart_prob: float = 0.5
     num_walks: int = 16
     name: str = "rw"
+    # Accepted for factory uniformity; the scan-carried walk has no
+    # neighbor-table expansion to fuse, so both values run the reference.
+    backend: str = "reference"
 
     def row_width(self, graph: Graph) -> int:
         return self.fanout

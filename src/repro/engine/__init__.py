@@ -12,12 +12,13 @@ Swap ``mode="independent"`` and nothing else changes — the paper's
 controlled comparison (§4.3) in one flag.  The low-level builders in
 ``repro.core`` remain the stable kernel layer underneath.
 """
-from repro.engine.config import CapacityPolicy, EngineConfig
+from repro.engine.config import CacheConfig, CapacityPolicy, EngineConfig
 from repro.engine.engine import MinibatchEngine
 from repro.engine.plan import Plan
 from repro.engine.stream import MinibatchStream, StreamItem
 
 __all__ = [
+    "CacheConfig",
     "CapacityPolicy",
     "EngineConfig",
     "MinibatchEngine",

@@ -40,12 +40,31 @@ from repro.core.feature_loader import FeatureStore
 from repro.core.graph import Graph, INVALID
 from repro.core.minibatch import CapacityPlan, Minibatch, build_minibatch
 from repro.core.partition import Partition, make_partition
-from repro.core.rng import DependentRNG, RNGState
+from repro.core.rng import DependentRNG, RNGState, _mix, hash_u32
 from repro.core.samplers.base import Sampler, make_sampler
 from repro.engine.config import EngineConfig
 from repro.engine.plan import Plan
 from repro.engine.stream import MinibatchStream
 from repro.store.tiers import TieredFeatureStore
+
+
+@jax.jit
+def _hash_permute_rows(rows: jax.Array, z: jax.Array) -> jax.Array:
+    """Row-wise hash-keyed permutation of an INVALID-padded pool table.
+
+    Valid ids get uint32 keys (clamped below the sentinel key) and sort
+    by them; INVALID entries pin to the key maximum so padding stays at
+    every row's tail.  Stable argsort makes collisions deterministic.
+    """
+    salt = jnp.arange(rows.shape[0], dtype=jnp.uint32)[:, None]
+    key = hash_u32(rows, z, salt)
+    key = jnp.where(
+        rows != INVALID,
+        jnp.minimum(key, jnp.uint32(0xFFFFFFFE)),
+        jnp.uint32(0xFFFFFFFF),
+    )
+    order = jnp.argsort(key, axis=1, stable=True)
+    return jnp.take_along_axis(rows, order, axis=1)
 
 
 @dataclass
@@ -73,7 +92,9 @@ class MinibatchEngine:
         graph.validate()  # malformed CSR fails here, not mid-stream
         cfg, cap = config, config.capacity
         V = graph.num_vertices
-        sampler = make_sampler(cfg.sampler, fanout=cfg.fanout)
+        sampler = make_sampler(
+            cfg.sampler, fanout=cfg.fanout, backend=cfg.plan_backend
+        )
         if cfg.mode == "cooperative":
             caps = CoopCapacityPlan.geometric(
                 cfg.local_batch, cfg.num_layers, cfg.fanout, V, cfg.num_pes,
@@ -95,13 +116,13 @@ class MinibatchEngine:
             part, ex = None, None
         store = FeatureStore(dataset.features) if dataset is not None else None
         tiered = None
-        if dataset is not None and cfg.feature_cache:
-            cap = cfg.cache_capacity
+        if dataset is not None and cfg.cache.enabled:
+            cap = cfg.cache.capacity
             if cap is None:
-                cap = max(cfg.cache_ways, V // 4)
-            cap -= cap % cfg.cache_ways  # CLOCK sets need capacity % ways == 0
+                cap = max(cfg.cache.ways, V // 4)
+            cap -= cap % cfg.cache.ways  # CLOCK sets need capacity % ways == 0
             tiered = TieredFeatureStore(
-                dataset.features, capacity=cap, ways=cfg.cache_ways,
+                dataset.features, capacity=cap, ways=cfg.cache.ways,
                 num_pes=cfg.num_pes,
             )
         return cls(
@@ -138,7 +159,7 @@ class MinibatchEngine:
         return DependentRNG(cfg.seed, cfg.effective_kappa).state_at(step)
 
     # ------------------------------------------------------------------
-    # Seed batches (host-side)
+    # Seed batches (device-resident, traceable)
     # ------------------------------------------------------------------
     def _seed_pool(self) -> np.ndarray:
         if self.dataset is not None:
@@ -153,50 +174,75 @@ class MinibatchEngine:
         owner = np.asarray(self.part.owner)
         return [pool[owner[pool] == p] for p in range(self.config.num_pes)]
 
-    def seed_batch(self, step: int) -> np.ndarray:
-        """(P, b) int32 seed rows for ``step`` (INVALID-padded short rows).
+    @cached_property
+    def _seed_rows(self) -> jax.Array:
+        """(R, C) int32 device pool table, INVALID-padded rows.
 
-        Independent: P draws from the global pool.  Cooperative: row p
-        holds only vertices PE p owns — the union is the global batch.
-        Nested schedules carve b-sized sub-batches out of a κ·b group
-        batch that is redrawn every κ steps (§3.2).
+        Cooperative: row p = PE p's owned train ids.  Independent nested:
+        the global pool replicated P times (each PE permutes its own
+        copy).  Independent otherwise: ONE global row — the first P·b
+        entries of its per-step permutation are the global batch, which
+        keeps the draw without-replacement *across* PEs.
         """
         cfg = self.config
         P, b = cfg.num_pes, cfg.local_batch
-        if cfg.schedule == "nested":
-            return self._nested_seed_batch(step)
-        out = np.full((P, b), np.int32(INVALID), np.int32)
         if cfg.mode == "cooperative":
-            pools = self._owned_pools
-            for p in range(P):
-                g = np.random.default_rng(cfg.seed + step * 131 + p)
-                n = min(b, len(pools[p]))
-                out[p, :n] = g.choice(pools[p], size=n, replace=False)
+            rows = self._owned_pools
+        elif cfg.schedule == "nested":
+            rows = [self._seed_pool()] * P
         else:
-            pool = self._seed_pool()
-            g = np.random.default_rng(cfg.seed + step)
-            sel = g.choice(len(pool), size=(P, b), replace=False)
-            out[:] = pool[sel].astype(np.int32)
-        return out
-
-    def _nested_seed_batch(self, step: int) -> np.ndarray:
-        cfg = self.config
-        P, b, k = cfg.num_pes, cfg.local_batch, cfg.kappa
-        sched = self._nested_sched()
-        g = sched.group_index(step)
-        pools = (
-            self._owned_pools
-            if cfg.mode == "cooperative"
-            else [self._seed_pool()] * P
+            rows = [self._seed_pool()]
+        need = cfg.kappa * b if cfg.schedule == "nested" else (
+            P * b if len(rows) == 1 else b
         )
-        out = np.full((P, b), np.int32(INVALID), np.int32)
-        for p in range(P):
-            rng = np.random.default_rng(cfg.seed + 977 * g + p)
-            n = min(k * b, len(pools[p]))
-            group_ids = rng.choice(pools[p], size=n, replace=False)
-            sub = sched.sub_batch(step, group_ids)
-            out[p, : len(sub)] = sub.astype(np.int32)
-        return out
+        C = max(need, max(len(r) for r in rows))
+        out = np.full((len(rows), C), np.int32(INVALID), np.int32)
+        for i, r in enumerate(rows):
+            out[i, : len(r)] = np.asarray(r, np.int32)
+        # first access may happen while tracing plan_at — keep the cached
+        # table a concrete array, not a leaked tracer
+        with jax.ensure_compile_time_eval():
+            return jnp.asarray(out)
+
+    def _seed_batch_traced(self, step) -> jax.Array:
+        """(P, b) int32 seed rows for a (possibly traced) ``step``.
+
+        Each draw is a hash-keyed permutation of the pool table: ids get
+        uint32 sort keys from :func:`repro.core.rng.hash_u32` under a
+        per-(step-or-group, row) salt; INVALID padding is pinned to the
+        key maximum so it sorts last.  No host round-trips, so the whole
+        seed schedule jits into ``plan_at`` / the train step.  Pools
+        smaller than the draw pad with INVALID instead of raising.
+        """
+        cfg = self.config
+        P, b = cfg.num_pes, cfg.local_batch
+        step = jnp.asarray(step, jnp.int32)
+        rows = self._seed_rows
+        base = jnp.uint32(cfg.seed & 0xFFFFFFFF)
+        if cfg.schedule == "nested":
+            k = cfg.kappa
+            g = (step // k).astype(jnp.uint32)
+            perm = _hash_permute_rows(rows, _mix(g ^ base * jnp.uint32(0x9E3779B9)))
+            i = step % k  # traced sub-batch index -> dynamic slice
+            return jax.lax.dynamic_slice_in_dim(perm, i * b, b, axis=1)
+        z = _mix(step.astype(jnp.uint32) ^ base * jnp.uint32(0x9E3779B9))
+        perm = _hash_permute_rows(rows, z)
+        if rows.shape[0] == 1:
+            return perm[0, : P * b].reshape(P, b)
+        return perm[:, :b]
+
+    def seed_batch(self, step: int) -> np.ndarray:
+        """(P, b) int32 seed rows for ``step`` (INVALID-padded short rows).
+
+        Host-side materialization of :meth:`_seed_batch_traced` — same
+        bits as the seeds ``plan_at``/the jitted train step consume.
+        Independent: P·b ids drawn from the global pool without
+        replacement.  Cooperative: row p holds only vertices PE p owns —
+        the union is the global batch.  Nested schedules carve b-sized
+        sub-batches out of a κ·b group batch redrawn every κ steps
+        (§3.2).
+        """
+        return np.asarray(self._seed_batch_traced(int(step)))
 
     # ------------------------------------------------------------------
     # Plan construction
@@ -208,24 +254,46 @@ class MinibatchEngine:
         to ``build_minibatch``) or stacked ``(P, b)`` for per-PE plans.
         ``rng`` defaults to the schedule's RNG at ``step``; pass a traced
         :class:`RNGState` from inside a jitted step to avoid retraces.
+        ``config.plan_backend`` selects the frontier lowering (reference
+        jnp algebra vs fused Pallas kernels) — outputs are bit-identical.
         """
         if rng is None:
             rng = self.rng_at(step)
         seeds = jnp.asarray(seeds, jnp.int32)
         cfg = self.config
+        backend = cfg.plan_backend
         if cfg.mode == "cooperative":
             return build_cooperative_minibatch(
                 self.graph, self.sampler, self.part, seeds, rng,
-                cfg.num_layers, self.caps, self.ex,
+                cfg.num_layers, self.caps, self.ex, backend=backend,
             )
         if seeds.ndim == 1:
             return build_minibatch(
-                self.graph, self.sampler, seeds, rng, cfg.num_layers, self.caps
+                self.graph, self.sampler, seeds, rng, cfg.num_layers,
+                self.caps, backend=backend,
             )
         build_one = lambda s: build_minibatch(
-            self.graph, self.sampler, s, rng, cfg.num_layers, self.caps
+            self.graph, self.sampler, s, rng, cfg.num_layers, self.caps,
+            backend=backend,
         )
         return jax.vmap(build_one)(seeds)
+
+    @cached_property
+    def _plan_at_compiled(self):
+        def build(step):
+            seeds = self._seed_batch_traced(step)
+            return self.build_plan(seeds, rng=self.rng_state(step))
+
+        return jax.jit(build)
+
+    def plan_at(self, step) -> Plan:
+        """Device-resident plan for ``step``: seed draw, schedule RNG and
+        sampling compile into ONE jitted program with no host round-trip
+        (``step`` is a dynamic int32, so a single trace serves the whole
+        run).  Always builds the stacked ``(P, b)`` layout — identical to
+        ``build_plan(seed_batch(step), rng=rng_state(step))``.
+        """
+        return self._plan_at_compiled(jnp.asarray(step, jnp.int32))
 
     # ------------------------------------------------------------------
     # Feature loading — through the tiered store when configured

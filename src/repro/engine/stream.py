@@ -68,9 +68,12 @@ class MinibatchStream:
 
     def _make(self, step: int) -> StreamItem:
         eng = self.engine
+        # one fused dispatch: seed draw + schedule RNG + sampling stay on
+        # device (plan_at); the host-side seeds/rng mirrors exposed on the
+        # StreamItem recompute the same bits and are cheap by comparison
+        plan = eng.plan_at(step)
         seeds = eng.seed_batch(step)
         rng = eng.rng_at(step)
-        plan = eng.build_plan(seeds, rng=rng)
         feats = eng.gather_features(plan) if self.fetch_features else None
         return StreamItem(
             step=step, plan=plan, rng=rng, seeds=seeds, features=feats

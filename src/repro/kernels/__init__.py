@@ -6,6 +6,13 @@ The paper's per-minibatch runtime is dominated by (Table 1):
 * vertex-embedding fetch from storage                -> ``gather`` (paged)
 * GAT edge softmax (§4.3 GAT experiment)             -> ``seg_softmax``
 
+Plan construction itself (the frontier hot loop behind
+``EngineConfig.plan_backend="fused"``) gets three more:
+
+* frontier dedup + rank resolution                   -> ``unique_compact``
+* masked CSR neighbor expansion                      -> ``frontier_gather``
+* CSR indptr -> per-edge row ids (COO assembly)      -> ``expand_indptr``
+
 Each kernel ships as ``kernel.py`` (pl.pallas_call + explicit BlockSpec
 VMEM tiling), ``ops.py`` (jit'd public wrapper with padding/dispatch) and
 ``ref.py`` (pure-jnp oracle used by tests and by non-TPU backends).
@@ -20,8 +27,13 @@ from repro.kernels.errors import KernelContractError, require_divisible
 from repro.kernels.spmm.ops import spmm_mean, spmm_sum
 from repro.kernels.gather.ops import paged_gather
 from repro.kernels.seg_softmax.ops import seg_softmax
+from repro.kernels.unique_compact.ops import unique_compact, unique_with_inverse
+from repro.kernels.frontier_gather.ops import frontier_gather
+from repro.kernels.expand_indptr.ops import expand_indptr
 
 __all__ = [
     "spmm_mean", "spmm_sum", "paged_gather", "seg_softmax",
+    "unique_compact", "unique_with_inverse", "frontier_gather",
+    "expand_indptr",
     "KernelContractError", "require_divisible",
 ]

@@ -1,0 +1,4 @@
+from repro.kernels.expand_indptr.ops import expand_indptr
+from repro.kernels.expand_indptr.ref import expand_indptr_ref
+
+__all__ = ["expand_indptr", "expand_indptr_ref"]

@@ -1,0 +1,25 @@
+"""Public wrapper for CSR indptr expansion."""
+from __future__ import annotations
+
+import jax
+
+from repro.kernels.expand_indptr.kernel import expand_indptr_pallas
+from repro.kernels.expand_indptr.ref import expand_indptr_ref
+
+
+def expand_indptr(
+    indptr: jax.Array,
+    num_edges: int,
+    *,
+    block_e: int = 512,
+) -> jax.Array:
+    """(num_edges,) int32 row id per edge slot, -1 past indptr[-1].
+
+    Dispatches to the Pallas kernel on TPU, to the searchsorted oracle
+    elsewhere.  ``num_edges`` that is not a block multiple falls back to
+    the reference (plan capacities are caller-chosen powers of two, so
+    this only triggers for odd ad-hoc shapes).
+    """
+    if jax.default_backend() != "tpu" or num_edges % block_e != 0:
+        return expand_indptr_ref(indptr, num_edges)
+    return expand_indptr_pallas(indptr, num_edges, block_e=block_e)

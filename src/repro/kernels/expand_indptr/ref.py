@@ -1,0 +1,19 @@
+"""Pure-jnp oracle for CSR indptr expansion (row ids per edge slot)."""
+from __future__ import annotations
+
+from functools import partial
+
+import jax
+import jax.numpy as jnp
+
+
+@partial(jax.jit, static_argnums=(1,))
+def expand_indptr_ref(indptr: jax.Array, num_edges: int) -> jax.Array:
+    """(num_edges,) int32 row id of each edge slot, -1 past indptr[-1].
+
+    ``row[e] = r`` iff ``indptr[r] <= e < indptr[r+1]``; slots at or
+    beyond the total edge count ``indptr[-1]`` get -1.
+    """
+    e = jnp.arange(num_edges, dtype=jnp.int32)
+    row = jnp.searchsorted(indptr, e, side="right").astype(jnp.int32) - 1
+    return jnp.where(e < indptr[-1], row, -1)

@@ -1,0 +1,4 @@
+from repro.kernels.frontier_gather.ops import frontier_gather
+from repro.kernels.frontier_gather.ref import frontier_gather_ref
+
+__all__ = ["frontier_gather", "frontier_gather_ref"]

@@ -1,0 +1,94 @@
+"""Pallas TPU kernel: masked CSR frontier gather (neighbor expansion).
+
+Every sampling hop expands a padded seed frontier into its degree-capped
+neighbor table ``(n, max_degree)``.  The CSR ``indices`` array lives in
+HBM and the row slices each seed needs are scattered across it — the
+same DMA-hostile random access as the embedding gather — so this kernel
+reuses the paged-sweep structure of ``repro.kernels.gather``:
+
+    grid = (seed blocks, edge pages)
+
+``indptr`` stays VMEM-resident (one int32 per vertex); each step holds
+one ``(page,)`` tile of ``indices`` and contributes the neighbor slots
+whose global edge index ``indptr[s] + k`` falls inside the current page.
+A slot is written by exactly one page; misses contribute INVALID
+(int32 max), so a running ``min`` combine is exact, with the customary
+``pl.when(p == 0)`` first-visit init.
+"""
+from __future__ import annotations
+
+import functools
+
+import jax
+import jax.numpy as jnp
+import numpy as np
+from jax.experimental import pallas as pl
+
+from repro.kernels.errors import require_divisible
+
+_INVALID = np.int32(2**31 - 1)
+
+
+def _frontier_kernel(seeds_ref, iptr_ref, ind_ref, out_ref, *,
+                     page: int, max_degree: int, block_n: int):
+    p = pl.program_id(1)
+    seeds = seeds_ref[...]                             # (bn,)
+    iptr = iptr_ref[...]                               # (V+1,)
+    tile = ind_ref[...]                                # (page,)
+    safe = jnp.where(seeds == _INVALID, 0, seeds)
+    offs = iptr[safe]
+    deg = iptr[safe + 1] - offs
+    pos = jax.lax.broadcasted_iota(jnp.int32, (block_n, max_degree), 1)
+    edge = offs[:, None] + pos                         # global edge index
+    valid = (pos < deg[:, None]) & (seeds != _INVALID)[:, None]
+    local = edge - p * page
+    hit = valid & (local >= 0) & (local < page)
+    vals = tile[jnp.clip(local, 0, page - 1)]
+    contrib = jnp.where(hit, vals, _INVALID)
+
+    @pl.when(p == 0)
+    def _init():
+        out_ref[...] = contrib
+
+    @pl.when(p != 0)
+    def _combine():
+        out_ref[...] = jnp.minimum(out_ref[...], contrib)
+
+
+@functools.partial(
+    jax.jit, static_argnames=("max_degree", "block_n", "page", "interpret")
+)
+def frontier_gather_pallas(
+    indptr: jax.Array,   # (V+1,) int32
+    indices: jax.Array,  # (E,) int32, E % page == 0
+    seeds: jax.Array,    # (n,) int32, n % block_n == 0
+    *,
+    max_degree: int,
+    block_n: int = 256,
+    page: int = 2048,
+    interpret: bool = False,
+) -> jax.Array:
+    """(n, max_degree) int32 neighbor table, INVALID where padded."""
+    (E,) = indices.shape
+    (n,) = seeds.shape
+    require_divisible("frontier_gather_pallas", [
+        ("E", E, "page", page),
+        ("n", n, "block_n", block_n),
+    ])
+    V1 = indptr.shape[0]
+    grid = (n // block_n, E // page)
+    return pl.pallas_call(
+        functools.partial(
+            _frontier_kernel, page=page, max_degree=max_degree,
+            block_n=block_n,
+        ),
+        grid=grid,
+        in_specs=[
+            pl.BlockSpec((block_n,), lambda i, p: (i,)),
+            pl.BlockSpec((V1,), lambda i, p: (0,)),
+            pl.BlockSpec((page,), lambda i, p: (p,)),
+        ],
+        out_specs=pl.BlockSpec((block_n, max_degree), lambda i, p: (i, 0)),
+        out_shape=jax.ShapeDtypeStruct((n, max_degree), jnp.int32),
+        interpret=interpret,
+    )(seeds, indptr, indices)

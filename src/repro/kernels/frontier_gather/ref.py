@@ -1,0 +1,34 @@
+"""Pure-jnp oracle for the masked CSR frontier gather.
+
+Bit-identical to ``Graph._neighbor_table`` — the padded degree-capped
+neighbor-table expansion every sampler starts from.
+"""
+from __future__ import annotations
+
+from functools import partial
+
+import jax
+import jax.numpy as jnp
+import numpy as np
+
+_INVALID = np.int32(2**31 - 1)  # numpy: safe to create at import time under a trace
+
+
+@partial(jax.jit, static_argnums=(3,))
+def frontier_gather_ref(
+    indptr: jax.Array,   # (V+1,) int32 CSR row pointer
+    indices: jax.Array,  # (E,) int32 source ids
+    seeds: jax.Array,    # (n,) int32 vertex ids, INVALID padded
+    max_degree: int,
+) -> tuple[jax.Array, jax.Array]:
+    """(nbr (n, max_degree) INVALID-padded, mask (n, max_degree))."""
+    num_edges = indices.shape[0]
+    safe = jnp.where(seeds == _INVALID, 0, seeds)
+    offs = indptr[safe]
+    deg = indptr[safe + 1] - offs
+    pos = jnp.arange(max_degree, dtype=jnp.int32)[None, :]
+    idx = jnp.clip(offs[:, None] + pos, 0, max(num_edges - 1, 0))
+    nbr = indices[idx]
+    mask = (pos < deg[:, None]) & (seeds != _INVALID)[:, None]
+    nbr = jnp.where(mask, nbr, _INVALID)
+    return nbr, mask

@@ -2,8 +2,9 @@
 from __future__ import annotations
 
 import jax.numpy as jnp
+import numpy as np
 
-_INVALID = jnp.int32(2**31 - 1)
+_INVALID = np.int32(2**31 - 1)  # numpy: safe to create at import time under a trace
 
 
 def gather_ref(table: jnp.ndarray, ids: jnp.ndarray) -> jnp.ndarray:

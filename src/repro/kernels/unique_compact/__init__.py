@@ -1,0 +1,4 @@
+from repro.kernels.unique_compact.ops import unique_compact, unique_with_inverse
+from repro.kernels.unique_compact.ref import unique_with_inverse_ref
+
+__all__ = ["unique_compact", "unique_with_inverse", "unique_with_inverse_ref"]

@@ -1,0 +1,120 @@
+"""Pallas TPU kernel: dedup + compaction of a sorted padded frontier.
+
+Plan construction spends its hot loop deduplicating the concatenated
+frontier ``cat = [S^l | sampled neighbors]`` and resolving every element
+into the next frontier ``S^{l+1}``.  The sort itself stays in XLA (TPU
+sort networks are already optimal there); this kernel fuses everything
+downstream of the sort into ONE sequential sweep:
+
+    grid = (m / block_m,)        -- sequential on TPU
+
+Each step consumes one block of the *sorted* ids and carries two scalars
+across grid steps in SMEM scratch — the running unique count and the
+previous block's last element — so first-occurrence flags and global
+unique ranks need no second pass.  Per block it emits
+
+* ``inv``  (blocked): the rank of each element in the unique set, already
+  masked to -1 for INVALID ids and for ranks beyond ``cap`` (the
+  keep-smallest-``cap`` overflow policy of ``frontier.unique_padded``);
+* ``uniq`` (cap-resident, revisited): the compacted unique ids, built via
+  a (cap x block_m) equality-match min-combine instead of a dynamic
+  scatter — duplicate matches carry equal values, so min is exact.
+
+Replaces a ``jnp.unique`` + two ``searchsorted`` lookups per layer with
+one fused pass over already-sorted data.
+"""
+from __future__ import annotations
+
+import functools
+
+import jax
+import jax.numpy as jnp
+import numpy as np
+from jax.experimental import pallas as pl
+from jax.experimental.pallas import tpu as pltpu
+
+from repro.kernels.errors import KernelContractError, require_divisible
+
+_INVALID = np.int32(2**31 - 1)
+
+
+def _unique_kernel(s_ref, inv_ref, uniq_ref, carry_ref, *, cap: int, block_m: int):
+    i = pl.program_id(0)
+    s = s_ref[...]                                     # (bm,) sorted ids
+
+    @pl.when(i == 0)
+    def _reset_carry():
+        carry_ref[0] = 0                               # uniques seen so far
+        carry_ref[1] = 0                               # previous last element
+
+    base = carry_ref[0]
+    prev = carry_ref[1]
+
+    # first-occurrence flags without adjacent shifts: position j is a
+    # first occurrence iff no earlier in-block position holds the same
+    # value AND (for j == 0 semantics) the value differs from the carry.
+    jj = jax.lax.broadcasted_iota(jnp.int32, (block_m, block_m), 0)
+    kk = jax.lax.broadcasted_iota(jnp.int32, (block_m, block_m), 1)
+    same_earlier = jnp.any((s[None, :] == s[:, None]) & (kk < jj), axis=1)
+    pos = jax.lax.broadcasted_iota(jnp.int32, (block_m, 1), 0)[:, 0]
+    carries_over = (i > 0) & (s == prev)
+    first = ~same_earlier & ~jnp.where(pos == 0, carries_over, False)
+
+    # global rank via an in-block inclusive prefix sum (triangular mask)
+    local = jnp.sum(first[None, :] & (kk <= jj), axis=1).astype(jnp.int32)
+    rank = base + local - 1                            # (bm,)
+
+    inv_ref[...] = jnp.where((rank < cap) & (s != _INVALID), rank, -1)
+
+    # compacted uniques: slot c takes the (unique) value whose rank is c
+    cc = jax.lax.broadcasted_iota(jnp.int32, (cap, block_m), 0)
+    match = rank[None, :] == cc                        # (cap, bm)
+    contrib = jnp.min(jnp.where(match, s[None, :], _INVALID), axis=1)
+
+    @pl.when(i == 0)
+    def _init():
+        uniq_ref[...] = contrib
+
+    @pl.when(i != 0)
+    def _combine():
+        uniq_ref[...] = jnp.minimum(uniq_ref[...], contrib)
+
+    carry_ref[0] = base + jnp.sum(first).astype(jnp.int32)
+    carry_ref[1] = s[block_m - 1]
+
+
+@functools.partial(
+    jax.jit, static_argnames=("cap", "block_m", "interpret")
+)
+def unique_compact_pallas(
+    sorted_ids: jax.Array,  # (m,) int32 ASCENDING, m % block_m == 0
+    cap: int,
+    *,
+    block_m: int = 256,
+    interpret: bool = False,
+) -> tuple[jax.Array, jax.Array]:
+    """(inv (m,), uniq (cap,)) — see module docstring for semantics."""
+    (m,) = sorted_ids.shape
+    require_divisible("unique_compact_pallas", [
+        ("m", m, "block_m", block_m),
+    ])
+    if cap < 1:
+        raise KernelContractError(
+            "unique_compact_pallas", "cap must be >= 1", {"cap": cap}
+        )
+    grid = (m // block_m,)
+    return pl.pallas_call(
+        functools.partial(_unique_kernel, cap=cap, block_m=block_m),
+        grid=grid,
+        in_specs=[pl.BlockSpec((block_m,), lambda i: (i,))],
+        out_specs=[
+            pl.BlockSpec((block_m,), lambda i: (i,)),
+            pl.BlockSpec((cap,), lambda i: (0,)),
+        ],
+        out_shape=[
+            jax.ShapeDtypeStruct((m,), jnp.int32),
+            jax.ShapeDtypeStruct((cap,), jnp.int32),
+        ],
+        scratch_shapes=[pltpu.SMEM((2,), jnp.int32)],
+        interpret=interpret,
+    )(sorted_ids)

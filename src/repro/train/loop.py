@@ -46,13 +46,14 @@ class TrainConfig:
     partition: str = "hash"
     seed: int = 0
     eval_every: int = 25
+    plan_backend: str = "reference"  # reference | fused (Pallas on TPU)
 
     def engine_config(self, num_layers: int) -> EngineConfig:
         return EngineConfig(
             mode=self.mode, num_pes=self.num_pes, local_batch=self.local_batch,
             num_layers=num_layers, sampler=self.sampler, fanout=self.fanout,
             schedule=self.schedule, kappa=self.kappa, partition=self.partition,
-            seed=self.seed,
+            seed=self.seed, plan_backend=self.plan_backend,
         )
 
 
@@ -73,10 +74,11 @@ def train_gnn(dataset, gnn_cfg: GNNConfig, tc: TrainConfig) -> TrainResult:
     params = init_gnn(jax.random.PRNGKey(tc.seed), gnn_cfg)
     opt = adam_init(params)
 
-    def loss_fn(params, seeds, step):
-        # single mode-agnostic path: plan -> features -> logits -> xent
-        rng = engine.rng_state(step)  # dynamic smoothed-RNG state
-        plan = engine.build_plan(seeds, rng=rng)
+    def loss_fn(params, step):
+        # single mode-agnostic path: plan -> features -> logits -> xent;
+        # plan_at folds the seed draw and schedule RNG into the trace, so
+        # the whole step is device-resident
+        plan = engine.plan_at(step)
         H = plan.gather_inputs(store)
         logits = engine.apply_model(params, gnn_cfg, plan, H)
         y = labels[jnp.clip(plan.seed_ids, 0, V - 1)]
@@ -86,18 +88,17 @@ def train_gnn(dataset, gnn_cfg: GNNConfig, tc: TrainConfig) -> TrainResult:
         )
 
     @partial(jax.jit, static_argnums=())
-    def train_step(params, opt, seeds, step):
-        loss, grads = jax.value_and_grad(loss_fn)(params, seeds, step)
+    def train_step(params, opt, step):
+        loss, grads = jax.value_and_grad(loss_fn)(params, step)
         params, opt = adam_update(params, grads, opt, lr=tc.lr)
         return params, opt, loss
 
     result = TrainResult(params=params)
     for step in range(tc.num_steps):
-        seeds = jnp.asarray(engine.seed_batch(step))
-        # `step` is a dynamic arg: the smoothed-RNG state (z1, z2, c) is
-        # computed inside the compiled step, so one trace serves the whole
-        # kappa schedule.
-        params, opt, loss = train_step(params, opt, seeds, jnp.int32(step))
+        # `step` is a dynamic arg: seed draw and smoothed-RNG state
+        # (z1, z2, c) are computed inside the compiled step, so one trace
+        # serves the whole kappa schedule.
+        params, opt, loss = train_step(params, opt, jnp.int32(step))
         result.losses.append(float(loss))
         if tc.eval_every and (step + 1) % tc.eval_every == 0:
             result.val_f1.append(evaluate(dataset, gnn_cfg, params, tc))

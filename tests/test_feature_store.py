@@ -28,7 +28,7 @@ import jax.numpy as jnp
 from repro.core.cache import LRUCache
 from repro.core.feature_loader import FeatureStore
 from repro.core.graph import INVALID
-from repro.engine import EngineConfig, MinibatchEngine
+from repro.engine import CacheConfig, EngineConfig, MinibatchEngine
 from repro.store import (
     ClockCache,
     TieredFeatureStore,
@@ -188,11 +188,10 @@ def test_fetch_accounting_matches_count_fetched(num_pes):
 # ---------------------------------------------------------------------------
 # bit-exact gather through the engine, all three modes
 # ---------------------------------------------------------------------------
-def _engine(small_graph, small_dataset, **kw):
-    kw.setdefault("cache_capacity", 256)
+def _engine(small_graph, small_dataset, cache_capacity=256, **kw):
     cfg = EngineConfig(
         local_batch=32, num_layers=2, fanout=4, sampler="ns",
-        feature_cache=True, **kw,
+        cache=CacheConfig(enabled=True, capacity=cache_capacity), **kw,
     )
     return MinibatchEngine.from_config(small_graph, cfg, dataset=small_dataset)
 

@@ -102,3 +102,124 @@ def test_ops_wrappers_dispatch_to_ref_on_cpu():
     e = jnp.zeros((8, 4))
     m = jnp.ones((8, 4), bool)
     np.testing.assert_allclose(np.asarray(seg_softmax(e, m)), 0.25)
+
+
+# ---------------------------------------------------------------------------
+# plan-construction kernels: unique_compact / frontier_gather / expand_indptr
+# ---------------------------------------------------------------------------
+from repro.core import frontier
+from repro.kernels.expand_indptr.kernel import expand_indptr_pallas
+from repro.kernels.expand_indptr.ref import expand_indptr_ref
+from repro.kernels.frontier_gather.kernel import frontier_gather_pallas
+from repro.kernels.frontier_gather.ref import frontier_gather_ref
+from repro.kernels.unique_compact.kernel import unique_compact_pallas
+from repro.kernels.unique_compact.ref import unique_with_inverse_ref
+
+INVALID = np.int32(2**31 - 1)
+
+
+def _padded_ids(m, hi, invalid_frac, seed):
+    rng = np.random.default_rng(seed)
+    ids = rng.integers(0, hi, size=m).astype(np.int32)
+    ids[rng.random(m) < invalid_frac] = INVALID
+    return jnp.asarray(ids)
+
+
+@pytest.mark.parametrize(
+    "m,cap,hi,block_m",
+    [
+        (512, 64, 100, 256),     # heavy duplication, overflow
+        (512, 600, 100, 256),    # cap > unique count (normal regime)
+        (256, 16, 8, 256),       # cap > value range: every id fits
+        (1024, 128, 2**20, 256), # near-distinct ids
+        (300, 64, 50, 128),      # m not a block multiple (ops pads)
+    ],
+)
+def test_unique_compact_matches_frontier_algebra(m, cap, hi, block_m):
+    """Kernel + ref both bit-match unique_padded + lookup."""
+    ids = _padded_ids(m, hi, 0.2, seed=m + cap)
+    uniq0 = frontier.unique_padded(ids, cap)
+    inv0 = frontier.lookup(uniq0, ids)
+    uniq1, inv1 = unique_with_inverse_ref(ids, cap)
+    np.testing.assert_array_equal(np.asarray(uniq0), np.asarray(uniq1))
+    np.testing.assert_array_equal(np.asarray(inv0), np.asarray(inv1))
+    pad = (-m) % block_m
+    flat = jnp.pad(ids, (0, pad), constant_values=INVALID)
+    order = jnp.argsort(flat)
+    inv_s, uniq2 = unique_compact_pallas(
+        flat[order], cap, block_m=block_m, interpret=True
+    )
+    inv2 = jnp.zeros((m + pad,), jnp.int32).at[order].set(inv_s)[:m]
+    np.testing.assert_array_equal(np.asarray(uniq0), np.asarray(uniq2))
+    np.testing.assert_array_equal(np.asarray(inv0), np.asarray(inv2))
+
+
+def test_unique_compact_all_invalid_and_empty_cap_edge():
+    ids = jnp.full((256,), INVALID)
+    uniq, inv = unique_with_inverse_ref(ids, 32)
+    assert (np.asarray(uniq) == INVALID).all()
+    assert (np.asarray(inv) == -1).all()
+    inv_s, uniq_k = unique_compact_pallas(ids, 32, block_m=256, interpret=True)
+    np.testing.assert_array_equal(np.asarray(uniq_k), np.asarray(uniq))
+    np.testing.assert_array_equal(np.asarray(inv_s), np.asarray(inv))
+
+
+def test_frontier_gather_matches_neighbor_table(small_graph):
+    g = small_graph
+    n = 192
+    rng = np.random.default_rng(3)
+    seeds = rng.integers(0, g.num_vertices, size=n).astype(np.int32)
+    seeds[rng.random(n) < 0.15] = INVALID
+    seeds = jnp.asarray(seeds)
+    nbr0, mask0 = g.neighbor_table(seeds)
+    nbr1, mask1 = frontier_gather_ref(g.indptr, g.indices, seeds, g.max_degree)
+    np.testing.assert_array_equal(np.asarray(nbr0), np.asarray(nbr1))
+    np.testing.assert_array_equal(np.asarray(mask0), np.asarray(mask1))
+    block_n, page = 64, 1024
+    pad_n = (-n) % block_n
+    pad_e = (-g.num_edges) % page
+    seeds_p = jnp.pad(seeds, (0, pad_n), constant_values=INVALID)
+    ind_p = jnp.pad(g.indices, (0, pad_e), constant_values=INVALID)
+    nbr2 = frontier_gather_pallas(
+        g.indptr, ind_p, seeds_p, max_degree=g.max_degree,
+        block_n=block_n, page=page, interpret=True,
+    )[:n]
+    np.testing.assert_array_equal(np.asarray(nbr0), np.asarray(nbr2))
+    np.testing.assert_array_equal(np.asarray(mask0), np.asarray(nbr2 != INVALID))
+
+
+@pytest.mark.parametrize("R_,Ecap", [(8, 512), (256, 1024), (1, 512)])
+def test_expand_indptr_matches_ref(R_, Ecap):
+    rng = np.random.default_rng(R_)
+    deg = rng.integers(0, 9, size=R_)
+    iptr = jnp.asarray(np.concatenate([[0], np.cumsum(deg)]).astype(np.int32))
+    want = expand_indptr_ref(iptr, Ecap)
+    got = expand_indptr_pallas(iptr, Ecap, block_e=512, interpret=True)
+    np.testing.assert_array_equal(np.asarray(want), np.asarray(got))
+    # row ids consistent with searchsorted semantics incl. empty rows
+    w = np.asarray(want)
+    total = min(int(iptr[-1]), Ecap)
+    assert (w[total:] == -1).all()
+    for e in range(total):
+        r = w[e]
+        assert iptr[r] <= e < iptr[r + 1]
+
+
+def test_plan_kernel_ops_dispatch_to_ref_on_cpu():
+    """Public ops fall back to the oracle off-TPU (same bits)."""
+    from repro.kernels import expand_indptr, frontier_gather, unique_with_inverse
+
+    assert jax.default_backend() != "tpu"  # CI precondition
+    ids = _padded_ids(400, 64, 0.1, seed=9)
+    uniq, inv = unique_with_inverse(ids, 48)
+    np.testing.assert_array_equal(
+        np.asarray(uniq), np.asarray(frontier.unique_padded(ids, 48))
+    )
+    np.testing.assert_array_equal(
+        np.asarray(inv), np.asarray(frontier.lookup(uniq, ids))
+    )
+    iptr = jnp.asarray([0, 2, 2, 5], jnp.int32)
+    np.testing.assert_array_equal(
+        np.asarray(expand_indptr(iptr, 8)),
+        np.asarray([0, 0, 2, 2, 2, -1, -1, -1]),
+    )

@@ -11,7 +11,7 @@ import numpy as np
 import pytest
 
 from repro.core.graph import INVALID
-from repro.engine import EngineConfig, MinibatchEngine
+from repro.engine import CacheConfig, EngineConfig, MinibatchEngine
 
 
 def _engine(small_graph, small_dataset=None, **kw):
@@ -87,7 +87,7 @@ def test_fetch_features_determinism(small_graph, small_dataset):
     plan sequence, and the features themselves are replay-identical."""
     mk = lambda: _engine(
         small_graph, small_dataset, schedule="smoothed", kappa=4, seed=5,
-        feature_cache=True, cache_capacity=256,
+        cache=CacheConfig(enabled=True, capacity=256),
     )
     a = list(mk().stream(4, prefetch=2, fetch_features=True))
     b = list(mk().stream(4, prefetch=0, fetch_features=True))
