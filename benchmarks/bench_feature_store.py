@@ -105,6 +105,7 @@ def run(coop: bool = True, fast: bool = False) -> Csv:
     with open(OUT_JSON, "w") as f:
         json.dump(payload, f, indent=2, sort_keys=True)
     print(f"# wrote {OUT_JSON} ({len(payload['rows'])} rows)", flush=True)
+    csv.snapshot = payload
     return csv
 
 

@@ -112,4 +112,5 @@ def run(fast: bool = False) -> Csv:
     worst = min(payload["speedups"].items(), key=lambda kv: kv[1])
     print(f"# plan_build: fused-vs-baseline speedup min {worst[1]}x "
           f"({worst[0]}) -> {OUT_JSON}", flush=True)
+    csv.snapshot = payload
     return csv

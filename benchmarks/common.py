@@ -3,12 +3,23 @@ from __future__ import annotations
 
 import sys
 from dataclasses import dataclass, field
+from typing import Optional
 
 
 @dataclass
 class Csv:
+    """Tabular benchmark result + the machine-readable snapshot payload.
+
+    ``snapshot`` is what ``benchmarks/run.py`` persists as
+    ``BENCH_<section>.json``; sections with structured gate metrics
+    (speedup maps, byte ratios) attach their own dict, everything else
+    gets the generic ``{header, rows}`` payload derived from the table —
+    so EVERY section leaves a snapshot for the perf trajectory.
+    """
+
     header: list
     rows: list = field(default_factory=list)
+    snapshot: Optional[dict] = None
 
     def add(self, *row):
         self.rows.append(row)
@@ -17,6 +28,15 @@ class Csv:
         print(",".join(map(str, self.header)), file=file)
         for r in self.rows:
             print(",".join(map(str, r)), file=file)
+
+    def to_payload(self, section: str) -> dict:
+        if self.snapshot is not None:
+            return self.snapshot
+        return {
+            "section": section,
+            "header": list(map(str, self.header)),
+            "rows": [list(r) for r in self.rows],
+        }
 
 
 _GRAPH_CACHE = {}

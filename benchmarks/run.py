@@ -8,10 +8,14 @@ Sections:
     cache_kappa    Fig 5a/5b + Table 6 (LRU miss vs dependency kappa)
     plan_build     device-resident plan_at vs sort-based host baseline
     feature_store  Fig 5 shape through the device CLOCK tier (+ oracle gap)
+    coop_shard     Fig 7b on devices: shard_map A2A bytes vs replicated gather
     coop_vs_indep  Tables 4/5/7 (per-PE counts + bandwidth-model times)
     convergence    Fig 4/9  (coop vs indep; kappa parity)
     kernels        per-kernel shape sweep
     roofline       §Roofline summary from experiments/dryrun/*.json
+
+Every section persists a machine-readable ``BENCH_<section>.json``
+snapshot (see docs/benchmarks.md for the snapshot/gate workflow).
 """
 from __future__ import annotations
 
@@ -78,6 +82,7 @@ def main() -> None:
     from benchmarks import (
         bench_cache_kappa,
         bench_convergence,
+        bench_coop_shard,
         bench_coop_vs_indep,
         bench_density,
         bench_feature_store,
@@ -93,6 +98,7 @@ def main() -> None:
     register("feature_store", lambda: bench_feature_store.run(
         coop=not args.fast, fast=args.fast))
     register("plan_build", lambda: bench_plan_build.run(fast=args.fast))
+    register("coop_shard", lambda: bench_coop_shard.run(fast=args.fast))
     register("coop_vs_indep", bench_coop_vs_indep.run)
     register("convergence", bench_convergence.run)
     register("kernels", bench_kernels.run)
@@ -103,8 +109,15 @@ def main() -> None:
         t0 = time.time()
         _section(name)
         try:
-            sections[name]().emit()
-            print(f"# {name} done in {time.time()-t0:.1f}s", flush=True)
+            csv = sections[name]()
+            csv.emit()
+            # every section leaves a snapshot: the perf trajectory needs a
+            # baseline to beat even for sections without a gate metric yet
+            out = f"BENCH_{name}.json"
+            with open(out, "w") as f:
+                json.dump(csv.to_payload(name), f, indent=2, sort_keys=True)
+            print(f"# {name} done in {time.time()-t0:.1f}s -> {out}",
+                  flush=True)
         except Exception as e:  # keep the suite going; report at the end
             print(f"# {name} FAILED: {e!r}", file=sys.stderr, flush=True)
             raise

@@ -10,7 +10,13 @@ Two layers live here:
   consumers never branch on minibatching mode.
 """
 from repro.core.graph import Graph, GraphValidationError, INVALID
-from repro.core.partition import Partition, make_partition, cross_edge_ratio
+from repro.core.partition import (
+    Partition,
+    cross_edge_ratio,
+    degree_balanced_partition,
+    make_partition,
+    ownership_balance,
+)
 from repro.core.rng import DependentRNG
 from repro.core.minibatch import (
     CapacityPlan,
@@ -39,6 +45,8 @@ __all__ = [
     "Partition",
     "make_partition",
     "cross_edge_ratio",
+    "degree_balanced_partition",
+    "ownership_balance",
     "DependentRNG",
     "CapacityPlan",
     "Minibatch",

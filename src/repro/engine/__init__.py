@@ -15,6 +15,7 @@ controlled comparison (§4.3) in one flag.  The low-level builders in
 from repro.engine.config import CacheConfig, CapacityPolicy, EngineConfig
 from repro.engine.engine import MinibatchEngine
 from repro.engine.plan import Plan
+from repro.engine.shard import ShardRunner
 from repro.engine.stream import MinibatchStream, StreamItem
 
 __all__ = [
@@ -24,5 +25,6 @@ __all__ = [
     "MinibatchEngine",
     "MinibatchStream",
     "Plan",
+    "ShardRunner",
     "StreamItem",
 ]

@@ -263,6 +263,12 @@ class MinibatchEngine:
         cfg = self.config
         backend = cfg.plan_backend
         if cfg.mode == "cooperative":
+            if cfg.executor == "shard":
+                raise ValueError(
+                    "build_plan runs per-PE bodies eagerly and cannot host "
+                    "the shard executor's all_to_all outside shard_map; use "
+                    "plan_at (routed through shard_runner) or executor='sim'"
+                )
             return build_cooperative_minibatch(
                 self.graph, self.sampler, self.part, seeds, rng,
                 cfg.num_layers, self.caps, self.ex, backend=backend,
@@ -292,8 +298,25 @@ class MinibatchEngine:
         (``step`` is a dynamic int32, so a single trace serves the whole
         run).  Always builds the stacked ``(P, b)`` layout — identical to
         ``build_plan(seed_batch(step), rng=rng_state(step))``.
+
+        With ``executor="shard"`` the build runs under ``shard_map`` on a
+        real P-device mesh (id all-to-alls on the wire); integer plan
+        state is bit-identical to the SimExecutor build.
         """
+        if self.config.executor == "shard" and self.config.mode == "cooperative":
+            return self.shard_runner.plan_at(step)
         return self._plan_at_compiled(jnp.asarray(step, jnp.int32))
+
+    @cached_property
+    def shard_runner(self):
+        """Multi-device runner (``executor="shard"`` only): binds this
+        engine to a P-device mesh and runs plan construction and the
+        train-step loss under ``jax.shard_map``.  Requires ≥ P devices
+        (on CPU: ``XLA_FLAGS=--xla_force_host_platform_device_count=P``
+        before importing jax)."""
+        from repro.engine.shard import ShardRunner
+
+        return ShardRunner.for_engine(self)
 
     # ------------------------------------------------------------------
     # Feature loading — through the tiered store when configured

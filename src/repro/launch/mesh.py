@@ -28,6 +28,28 @@ def make_host_mesh(num_devices: int | None = None, axis: str = "data"):
     return jax.make_mesh((n,), (axis,))
 
 
+def make_coop_mesh(num_pes: int, axis_name: str = "data"):
+    """1-D mesh carrying the cooperative PE axis (one PE per device).
+
+    This is the mesh :class:`repro.engine.shard.ShardRunner` runs
+    ``shard_map`` over.  On CPU, force a multi-device platform *before*
+    importing jax::
+
+        XLA_FLAGS=--xla_force_host_platform_device_count=P
+
+    which is how CI exercises the real all-to-all path without TPUs.
+    """
+    avail = len(jax.devices())
+    if avail < num_pes:
+        raise ValueError(
+            f"cooperative shard execution needs num_pes={num_pes} devices, "
+            f"but jax sees {avail}; on CPU set "
+            f"XLA_FLAGS=--xla_force_host_platform_device_count={num_pes} "
+            f"before importing jax"
+        )
+    return jax.make_mesh((num_pes,), (axis_name,))
+
+
 def batch_axes(mesh) -> tuple[str, ...]:
     """Mesh axes that shard the batch dimension."""
     names = mesh.axis_names

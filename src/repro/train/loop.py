@@ -47,6 +47,7 @@ class TrainConfig:
     seed: int = 0
     eval_every: int = 25
     plan_backend: str = "reference"  # reference | fused (Pallas on TPU)
+    executor: str = "sim"            # sim | shard (real P-device mesh)
 
     def engine_config(self, num_layers: int) -> EngineConfig:
         return EngineConfig(
@@ -54,6 +55,7 @@ class TrainConfig:
             num_layers=num_layers, sampler=self.sampler, fanout=self.fanout,
             schedule=self.schedule, kappa=self.kappa, partition=self.partition,
             seed=self.seed, plan_backend=self.plan_backend,
+            executor=self.executor,
         )
 
 
@@ -64,20 +66,19 @@ class TrainResult:
     val_f1: list = field(default_factory=list)
 
 
-def train_gnn(dataset, gnn_cfg: GNNConfig, tc: TrainConfig) -> TrainResult:
-    engine = MinibatchEngine.from_config(
-        dataset.graph, tc.engine_config(gnn_cfg.num_layers), dataset=dataset
-    )
-    store, labels = engine.store, dataset.labels
-    V = dataset.graph.num_vertices
+def make_loss_fn(engine: MinibatchEngine, gnn_cfg: GNNConfig, store, labels):
+    """Single mode-agnostic loss path: plan -> features -> logits -> xent.
 
-    params = init_gnn(jax.random.PRNGKey(tc.seed), gnn_cfg)
-    opt = adam_init(params)
+    ``plan_at`` folds the seed draw and schedule RNG into the trace, so
+    the whole step is device-resident.  Used by the sim/vmap executors;
+    the shard executor's equivalent lives in
+    :meth:`repro.engine.shard.ShardRunner.make_loss_and_grad` with the
+    same masked-mean semantics.
+    """
+    V = engine.graph.num_vertices
+    labels = jnp.asarray(labels)
 
     def loss_fn(params, step):
-        # single mode-agnostic path: plan -> features -> logits -> xent;
-        # plan_at folds the seed draw and schedule RNG into the trace, so
-        # the whole step is device-resident
         plan = engine.plan_at(step)
         H = plan.gather_inputs(store)
         logits = engine.apply_model(params, gnn_cfg, plan, H)
@@ -87,9 +88,33 @@ def train_gnn(dataset, gnn_cfg: GNNConfig, tc: TrainConfig) -> TrainResult:
             logits.reshape(-1, logits.shape[-1]), y.reshape(-1), valid.reshape(-1)
         )
 
+    return loss_fn
+
+
+def train_gnn(dataset, gnn_cfg: GNNConfig, tc: TrainConfig) -> TrainResult:
+    engine = MinibatchEngine.from_config(
+        dataset.graph, tc.engine_config(gnn_cfg.num_layers), dataset=dataset
+    )
+    store, labels = engine.store, dataset.labels
+
+    params = init_gnn(jax.random.PRNGKey(tc.seed), gnn_cfg)
+    opt = adam_init(params)
+
+    if tc.executor == "shard" and tc.mode == "cooperative":
+        # real multi-device path: per-PE plan build + cooperative F/B run
+        # under shard_map on a P-device mesh, and gradient sync is an
+        # explicit jax.lax.psum over the same axis as the all-to-alls
+        loss_and_grad = engine.shard_runner.make_loss_and_grad(
+            gnn_cfg, store.features, labels
+        )
+    else:
+        loss_and_grad = jax.value_and_grad(
+            make_loss_fn(engine, gnn_cfg, store, labels)
+        )
+
     @partial(jax.jit, static_argnums=())
     def train_step(params, opt, step):
-        loss, grads = jax.value_and_grad(loss_fn)(params, step)
+        loss, grads = loss_and_grad(params, step)
         params, opt = adam_update(params, grads, opt, lr=tc.lr)
         return params, opt, loss
 

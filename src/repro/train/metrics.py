@@ -5,15 +5,23 @@ import jax.numpy as jnp
 import numpy as np
 
 
-def masked_softmax_xent(logits, labels, valid):
-    """Mean CE over valid rows; logits (n, C), labels (n,), valid (n,)."""
+def masked_softmax_xent_parts(logits, labels, valid):
+    """(CE sum over valid rows, valid count) — the two pieces a shard_map
+    body psums across PEs before dividing, so the distributed loss is the
+    same global masked mean the single-device formula computes (up to
+    cross-PE float reduction order)."""
     logz = jnp.log(jnp.sum(jnp.exp(logits - logits.max(-1, keepdims=True)), -1))
     ll = jnp.take_along_axis(
         logits - logits.max(-1, keepdims=True), labels[:, None], axis=-1
     )[:, 0]
     ce = logz - ll
-    n = jnp.maximum(jnp.sum(valid), 1)
-    return jnp.sum(jnp.where(valid, ce, 0.0)) / n
+    return jnp.sum(jnp.where(valid, ce, 0.0)), jnp.sum(valid)
+
+
+def masked_softmax_xent(logits, labels, valid):
+    """Mean CE over valid rows; logits (n, C), labels (n,), valid (n,)."""
+    s, n = masked_softmax_xent_parts(logits, labels, valid)
+    return s / jnp.maximum(n, 1)
 
 
 def micro_f1(preds: np.ndarray, labels: np.ndarray) -> float:

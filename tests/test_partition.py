@@ -1,11 +1,14 @@
-"""Partitioners: balance + cross-edge ratio ordering."""
+"""Partitioners: ownership invariants, balance, cross-edge ordering."""
 import numpy as np
+import pytest
 
 from repro.core.partition import (
     cross_edge_ratio,
+    degree_balanced_partition,
     greedy_bfs_partition,
     hash_partition,
     make_partition,
+    ownership_balance,
 )
 
 
@@ -37,6 +40,56 @@ def test_bfs_partition_covers_all(small_graph):
 
 
 def test_make_partition_dispatch(small_graph):
-    for kind in ("hash", "block", "bfs"):
+    for kind in ("hash", "block", "bfs", "degree"):
         p = make_partition(kind, small_graph, 4)
         assert p.num_parts == 4
+
+
+@pytest.mark.parametrize("kind", ["hash", "block", "bfs", "degree"])
+def test_every_vertex_owned_exactly_once(small_graph, kind):
+    """1-D partitioning invariant (§3.1): the owner map is total and
+    single-valued — every vertex maps to exactly one PE in [0, P)."""
+    for P in (2, 4, 8):
+        owner = np.asarray(make_partition(kind, small_graph, P).owner)
+        assert owner.shape == (small_graph.num_vertices,)
+        assert ((owner >= 0) & (owner < P)).all()
+        # each vertex appears in exactly one ownership set
+        sets = [np.nonzero(owner == p)[0] for p in range(P)]
+        assert sum(len(s) for s in sets) == small_graph.num_vertices
+        assert len(np.unique(np.concatenate(sets))) == small_graph.num_vertices
+
+
+def test_degree_balanced_partition_balances_both_loads(small_graph):
+    """Vertex AND edge ownership within tolerance across P (the grower's
+    contract: degree-targeted growth + vertex rebalancing pass)."""
+    for P in (2, 4, 8):
+        part = degree_balanced_partition(small_graph, P, seed=0)
+        bal = ownership_balance(small_graph, part)
+        assert bal["vertices"] <= 1.10, (P, bal)
+        assert bal["edges"] <= 1.35, (P, bal)
+
+
+def test_degree_balanced_beats_bfs_on_edge_balance(small_graph):
+    """On a power-law graph, vertex-balanced BFS skews per-PE edge load;
+    the degree-balanced grower must do strictly better."""
+    P = 4
+    bal_deg = ownership_balance(
+        small_graph, degree_balanced_partition(small_graph, P, seed=0))
+    bal_bfs = ownership_balance(
+        small_graph, greedy_bfs_partition(small_graph, P, seed=0))
+    assert bal_deg["edges"] < bal_bfs["edges"], (bal_deg, bal_bfs)
+
+
+def test_degree_balanced_locality_survives_rebalance(small_graph):
+    """Rebalancing moves only cheap vertices, so the cut stays below the
+    random-partition baseline c = (P-1)/P."""
+    P = 4
+    c = cross_edge_ratio(
+        small_graph, degree_balanced_partition(small_graph, P, seed=0))
+    assert c < (P - 1) / P
+
+
+def test_degree_balanced_deterministic(small_graph):
+    a = np.asarray(degree_balanced_partition(small_graph, 4, seed=3).owner)
+    b = np.asarray(degree_balanced_partition(small_graph, 4, seed=3).owner)
+    assert (a == b).all()

@@ -1,0 +1,128 @@
+"""Validate the `path.py:Symbol` pointers the docs are built from.
+
+docs/*.md and README.md anchor every architectural claim to code with
+backticked pointers in two forms:
+
+* ``src/repro/engine/shard.py:ShardRunner`` — the file must exist and
+  the symbol must be a top-level function/class, a ``Class.method`` /
+  ``Class.attr``, or a module-level constant in that file's AST;
+* ``src/repro/core/partition.py`` (any backticked token containing a
+  ``/`` and a known extension, or ending in ``/``) — the path must
+  exist in the repo.
+
+Tokens with spaces (shell commands) and bare filenames with no
+directory component (generated artifacts like ``BENCH_*.json``) are
+ignored. Exit is non-zero if any pointer is dead, so CI catches docs
+rot the moment a symbol is renamed:
+
+    python tools/check_docs.py            # docs/*.md + README.md
+    python tools/check_docs.py docs/kernels.md
+"""
+from __future__ import annotations
+
+import ast
+import re
+import sys
+from pathlib import Path
+
+REPO = Path(__file__).resolve().parent.parent
+BACKTICK = re.compile(r"`([^`\n]+)`")
+SYMBOL_PTR = re.compile(r"^(?P<path>[\w./-]+\.py):(?P<sym>[A-Za-z_][\w.]*)$")
+PATH_EXTS = (".py", ".md", ".json", ".yml", ".yaml", ".toml", ".sh")
+
+
+def module_symbols(py_path: Path) -> set:
+    """Top-level defs/classes/constants + Class.method / Class.attr."""
+    tree = ast.parse(py_path.read_text())
+    syms = set()
+    for node in tree.body:
+        if isinstance(node, (ast.FunctionDef, ast.AsyncFunctionDef)):
+            syms.add(node.name)
+        elif isinstance(node, ast.ClassDef):
+            syms.add(node.name)
+            for item in node.body:
+                if isinstance(item, (ast.FunctionDef, ast.AsyncFunctionDef)):
+                    syms.add(f"{node.name}.{item.name}")
+                elif isinstance(item, ast.AnnAssign) and isinstance(
+                    item.target, ast.Name
+                ):
+                    syms.add(f"{node.name}.{item.target.id}")
+                elif isinstance(item, ast.Assign):
+                    for t in item.targets:
+                        if isinstance(t, ast.Name):
+                            syms.add(f"{node.name}.{t.id}")
+        elif isinstance(node, ast.AnnAssign) and isinstance(
+            node.target, ast.Name
+        ):
+            syms.add(node.target.id)
+        elif isinstance(node, ast.Assign):
+            for t in node.targets:
+                if isinstance(t, ast.Name):
+                    syms.add(t.id)
+    return syms
+
+
+def check_file(md_path: Path, symbol_cache: dict) -> list:
+    """-> list of (line_no, token, reason) dead pointers."""
+    dead = []
+    for line_no, line in enumerate(md_path.read_text().splitlines(), 1):
+        for token in BACKTICK.findall(line):
+            if " " in token:
+                continue  # shell command, prose
+            m = SYMBOL_PTR.match(token)
+            if m:
+                target = REPO / m["path"]
+                if not target.is_file():
+                    dead.append((line_no, token, "file missing"))
+                    continue
+                if target not in symbol_cache:
+                    symbol_cache[target] = module_symbols(target)
+                if m["sym"] not in symbol_cache[target]:
+                    dead.append((line_no, token, "symbol missing"))
+            elif "/" in token and (
+                token.endswith(PATH_EXTS) or token.endswith("/")
+            ):
+                if not (REPO / token).exists():
+                    dead.append((line_no, token, "path missing"))
+    return dead
+
+
+def main(argv=None) -> int:
+    argv = sys.argv[1:] if argv is None else argv
+    if argv:
+        targets = [Path(a).resolve() for a in argv]
+    else:
+        targets = sorted((REPO / "docs").glob("*.md")) + [REPO / "README.md"]
+    missing = [t for t in targets if not t.is_file()]
+    if missing:
+        for t in missing:
+            print(f"MISSING doc: {t}", file=sys.stderr)
+        return 1
+
+    symbol_cache, total_dead, total_ptrs = {}, 0, 0
+    for md in targets:
+        dead = check_file(md, symbol_cache)
+        n_ptrs = sum(
+            1
+            for line in md.read_text().splitlines()
+            for tok in BACKTICK.findall(line)
+            if " " not in tok and (SYMBOL_PTR.match(tok) or "/" in tok)
+        )
+        total_ptrs += n_ptrs
+        rel = md.relative_to(REPO) if md.is_relative_to(REPO) else md
+        if dead:
+            total_dead += len(dead)
+            for line_no, token, reason in dead:
+                print(f"DEAD {rel}:{line_no}: `{token}` ({reason})",
+                      file=sys.stderr)
+        else:
+            print(f"ok   {rel}: {n_ptrs} pointers")
+    if total_dead:
+        print(f"{total_dead} dead pointer(s)", file=sys.stderr)
+        return 1
+    print(f"all {total_ptrs} pointers resolve across {len(targets)} file(s)")
+    return 0
+
+
+if __name__ == "__main__":
+    raise SystemExit(main())
