@@ -43,7 +43,8 @@ def _edges_per_pe_max(plan) -> int:
     return int(np.max(per_pe))
 
 
-def _measure(g, P: int, sampler_name: str, partition: str = "hash"):
+def _measure(g, P: int, sampler_name: str, partition: str = "hash",
+             trials: int = TRIALS):
     cfg = EngineConfig(
         mode="independent", num_pes=P, local_batch=GLOBAL_BATCH // P,
         num_layers=LAYERS, sampler=sampler_name, fanout=5,
@@ -54,7 +55,7 @@ def _measure(g, P: int, sampler_name: str, partition: str = "hash"):
     eng_i = MinibatchEngine.from_config(g, cfg)
     eng_c = MinibatchEngine.from_config(g, cfg.with_mode("cooperative"))
     indep, coop = [], []
-    for t in range(TRIALS):
+    for t in range(trials):
         plan_i = eng_i.build_plan(eng_i.seed_batch(t), step=t)
         s_i = plan_i.stats()
         indep.append(
@@ -91,16 +92,21 @@ def _model_time_us(stats, mode: str) -> dict:
     }
 
 
-def run() -> Csv:
-    g = bench_graph(scale=12)
+def run(fast: bool = False) -> Csv:
+    g = bench_graph(scale=11 if fast else 12)
+    trials = 2 if fast else TRIALS
+    ps = (2, 4) if fast else (2, 4, 8)
     csv = Csv(
         ["sampler", "P", "mode", "partition", "S3_perPE", "E_perPE",
          "comm_perPE", "cross_edge_c", "load_us_model", "fb_us_model"]
     )
+    wins = {}
     for sampler_name in ("labor0", "ns"):
-        for P in (2, 4, 8):
+        for P in ps:
             for partition in ("hash", "bfs"):
-                indep, coop, c = _measure(g, P, sampler_name, partition)
+                indep, coop, c = _measure(
+                    g, P, sampler_name, partition, trials=trials
+                )
                 for mode, st in (("indep", indep), ("coop", coop)):
                     t = _model_time_us(st, mode)
                     csv.add(
@@ -108,6 +114,19 @@ def run() -> Csv:
                         int(st["S3"]), int(st["E"]), int(st["comm"]),
                         round(c, 3), round(t["load_us"], 1), round(t["fb_us"], 1),
                     )
+                # gate metric: per-PE input-row reduction from cooperation
+                # (Table 5's work win) — hash-keyed sampling makes every
+                # count deterministic, so CI gates at a tight threshold
+                wins[f"{sampler_name}_P{P}_{partition}"] = round(
+                    indep["S3"] / max(coop["S3"], 1.0), 4
+                )
+    csv.snapshot = {
+        "section": "coop_vs_indep",
+        "header": list(map(str, csv.header)),
+        "rows": [list(r) for r in csv.rows],
+        "wins": wins,
+        "config": {"fast": fast, "trials": trials, "P": list(ps)},
+    }
     return csv
 
 

@@ -10,6 +10,7 @@ Sections:
     feature_store  Fig 5 shape through the device CLOCK tier (+ oracle gap)
     coop_shard     Fig 7b on devices: shard_map A2A bytes vs replicated gather
     coop_vs_indep  Tables 4/5/7 (per-PE counts + bandwidth-model times)
+    serve          coalescing inference server vs per-request baseline
     convergence    Fig 4/9  (coop vs indep; kappa parity)
     kernels        per-kernel shape sweep
     roofline       §Roofline summary from experiments/dryrun/*.json
@@ -90,6 +91,7 @@ def main() -> None:
         bench_monotonicity,
         bench_plan_build,
         bench_roofline,
+        bench_serve,
     )
 
     register("monotonicity", lambda: bench_monotonicity.run(trials=3 if args.fast else 6))
@@ -99,7 +101,8 @@ def main() -> None:
         coop=not args.fast, fast=args.fast))
     register("plan_build", lambda: bench_plan_build.run(fast=args.fast))
     register("coop_shard", lambda: bench_coop_shard.run(fast=args.fast))
-    register("coop_vs_indep", bench_coop_vs_indep.run)
+    register("coop_vs_indep", lambda: bench_coop_vs_indep.run(fast=args.fast))
+    register("serve", lambda: bench_serve.run(fast=args.fast))
     register("convergence", bench_convergence.run)
     register("kernels", bench_kernels.run)
     register("roofline", bench_roofline.run)

@@ -195,9 +195,50 @@ def _plan_at_entry() -> TraceEntry:
     )
 
 
+def _serve_entry() -> TraceEntry:
+    def build():
+        import jax
+        import jax.numpy as jnp
+
+        from repro.data.recsys import make_recsys
+        from repro.models.gnn import GNNConfig, init_gnn
+        from repro.serve import GNNServer, ServeConfig
+
+        ds = make_recsys(
+            num_users=64, num_items=32, edges_per_user=4, feature_dim=32,
+            seed=0,
+        )
+        gnn = GNNConfig(
+            model="gcn", num_layers=2, in_dim=32, hidden_dim=32,
+            num_classes=ds.num_classes,
+        )
+        server = GNNServer(
+            ds.graph, ds.features, gnn, init_gnn(jax.random.PRNGKey(0), gnn),
+            ServeConfig(num_layers=2, fanout=4, max_batch=8, min_bucket=8,
+                        use_cache=False),
+        )
+
+        def fn(seeds):
+            # the serving contract: every same-bucket coalesced batch —
+            # regardless of which seeds traffic merged — reuses ONE
+            # compiled plan->gather->forward step
+            return server.hot_path(seeds)
+
+        s0 = jnp.asarray(ds.user_ids[:8], jnp.int32)
+        s1 = jnp.asarray(ds.user_ids[8:16], jnp.int32)
+        return fn, (), [
+            lambda: ((s0,), {}),
+            lambda: ((s1,), {}),
+        ]
+
+    return TraceEntry(
+        "serve.hot_path[bucket=8]", "src/repro/serve/server.py", build
+    )
+
+
 def default_entries() -> List[TraceEntry]:
     return _kernel_entries() + [
-        _graph_entry(), _engine_entry(), _plan_at_entry(),
+        _graph_entry(), _engine_entry(), _plan_at_entry(), _serve_entry(),
     ]
 
 

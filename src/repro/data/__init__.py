@@ -1,4 +1,12 @@
+from repro.data.recsys import RecsysDataset, make_recsys, recsys_graph
 from repro.data.synthetic import SyntheticGraphDataset, rmat_graph
 from repro.data.tokens import synthetic_token_batch
 
-__all__ = ["SyntheticGraphDataset", "rmat_graph", "synthetic_token_batch"]
+__all__ = [
+    "RecsysDataset",
+    "SyntheticGraphDataset",
+    "make_recsys",
+    "recsys_graph",
+    "rmat_graph",
+    "synthetic_token_batch",
+]

@@ -1,0 +1,134 @@
+"""Synthetic bipartite user-item recommendation graph (serving workload).
+
+The ROADMAP's "millions of users" scenario made concrete: ``U`` users and
+``I`` items with power-law degrees on *both* sides — user activity is
+Pareto-distributed (a few heavy users, a long tail of light ones) and
+item popularity is Zipfian (a small head of hot items absorbs most
+edges).  Concurrent users' ego-networks therefore overlap heavily in the
+hot-item head, which is exactly the concavity condition (Thm 3.2) that
+makes coalesced inference serving fetch strictly less than per-request
+execution (``repro.serve``).
+
+Vertex layout: users occupy ids ``[0, U)``, items ``[U, U + I)``.  The
+graph is undirected (edges in both CSR directions) so a 2-layer ego
+query from a user reaches items and co-consuming users.
+"""
+from __future__ import annotations
+
+from dataclasses import dataclass, field
+
+import jax
+import jax.numpy as jnp
+import numpy as np
+
+from repro.core.graph import Graph
+
+
+def _zipf_probs(n: int, alpha: float) -> np.ndarray:
+    """p(rank r) ∝ (r+1)^-alpha, normalized."""
+    p = (np.arange(1, n + 1, dtype=np.float64)) ** (-alpha)
+    return p / p.sum()
+
+
+def recsys_graph(
+    num_users: int = 4096,
+    num_items: int = 1024,
+    edges_per_user: float = 8.0,
+    item_alpha: float = 1.05,
+    user_pareto: float = 2.5,
+    max_degree: int = 64,
+    seed: int = 0,
+) -> Graph:
+    """Bipartite user-item interaction graph with power-law degrees.
+
+    ``edges_per_user`` sets the *mean* user activity; per-user counts are
+    Pareto(``user_pareto``) draws scaled to that mean.  Each interaction
+    picks an item from a Zipf(``item_alpha``) popularity ranking over a
+    seed-deterministic item permutation, so hot items are not simply the
+    low ids.  Degrees are capped at ``max_degree`` (down-sampled) like
+    every other graph in the repo so sampling lowers with static shapes.
+    """
+    rng = np.random.default_rng(seed)
+    U, I = num_users, num_items
+    # user activity: Pareto with mean scaled to edges_per_user, >= 1
+    raw = rng.pareto(user_pareto, U) + 1.0
+    k_u = np.maximum(1, np.round(raw * (edges_per_user / raw.mean()))).astype(
+        np.int64
+    )
+    src_users = np.repeat(np.arange(U, dtype=np.int64), k_u)
+    # item popularity: Zipf over a hidden ranking permutation
+    ranked = rng.permutation(I)
+    items = ranked[
+        rng.choice(I, size=len(src_users), p=_zipf_probs(I, item_alpha))
+    ]
+    dst_items = items.astype(np.int64) + U
+    # dedup repeat (user, item) interactions
+    key = src_users * (U + I) + dst_items
+    _, uniq = np.unique(key, return_index=True)
+    src_users, dst_items = src_users[uniq], dst_items[uniq]
+    src = np.concatenate([src_users, dst_items])
+    dst = np.concatenate([dst_items, src_users])
+    return Graph.from_edges(
+        src, dst, num_vertices=U + I, max_degree=max_degree, seed=seed
+    )
+
+
+@dataclass
+class RecsysDataset:
+    """Bipartite graph + feature rows + the user-id query population.
+
+    Mirrors :class:`repro.data.synthetic.SyntheticGraphDataset`'s surface
+    where the engine needs it (``features``, ``train_ids``) so a
+    ``MinibatchEngine`` can be constructed directly over it; serving
+    treats ``user_ids`` as the population live queries draw seeds from.
+    """
+
+    graph: Graph
+    num_users: int
+    feature_dim: int = 64
+    num_classes: int = 16
+    seed: int = 0
+    features: jax.Array = field(init=False)
+    user_ids: np.ndarray = field(init=False)
+    item_ids: np.ndarray = field(init=False)
+    train_ids: np.ndarray = field(init=False)
+
+    def __post_init__(self):
+        V = self.graph.num_vertices
+        if not 0 < self.num_users < V:
+            raise ValueError(
+                f"num_users must be in (0, {V}), got {self.num_users}"
+            )
+        rng = np.random.default_rng(self.seed)
+        feats = rng.standard_normal((V, self.feature_dim)).astype(np.float32)
+        self.features = jnp.asarray(feats)
+        self.user_ids = np.arange(self.num_users, dtype=np.int32)
+        self.item_ids = np.arange(self.num_users, V, dtype=np.int32)
+        self.train_ids = self.user_ids
+
+    @property
+    def num_items(self) -> int:
+        return self.graph.num_vertices - self.num_users
+
+
+def make_recsys(
+    num_users: int = 4096,
+    num_items: int = 1024,
+    edges_per_user: float = 8.0,
+    feature_dim: int = 64,
+    num_classes: int = 16,
+    max_degree: int = 64,
+    seed: int = 0,
+) -> RecsysDataset:
+    """One-call workload constructor used by serving benchmarks/examples."""
+    g = recsys_graph(
+        num_users=num_users,
+        num_items=num_items,
+        edges_per_user=edges_per_user,
+        max_degree=max_degree,
+        seed=seed,
+    )
+    return RecsysDataset(
+        g, num_users=num_users, feature_dim=feature_dim,
+        num_classes=num_classes, seed=seed,
+    )

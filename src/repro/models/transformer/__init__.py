@@ -5,6 +5,7 @@ from repro.models.transformer.model import (
     forward_prefill,
     forward_decode,
     init_decode_state,
+    prefill_decode,
 )
 
 __all__ = [
@@ -14,4 +15,5 @@ __all__ = [
     "forward_prefill",
     "forward_decode",
     "init_decode_state",
+    "prefill_decode",
 ]

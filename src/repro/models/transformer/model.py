@@ -335,6 +335,31 @@ def forward_decode(
 
 
 # --------------------------------------------------------------------------
+# prefill: fill the decode caches over a whole prompt in ONE compiled call
+# --------------------------------------------------------------------------
+def prefill_decode(
+    params: dict, cfg: ArchConfig, state: dict, tokens: jax.Array  # (B, S0)
+) -> tuple[jax.Array, dict]:
+    """Batched prompt prefill against the decode caches.
+
+    Scans :func:`forward_decode` over the prompt positions inside one
+    program, so a jitted caller pays ONE dispatch for the whole prompt
+    instead of S0 python-loop round trips — and because the scan body IS
+    the per-token decode step, the resulting caches, state and logits
+    are bit-identical to stepping ``serve_step`` token by token (pinned
+    by ``tests/test_transformer_units.py``).  Returns the last prompt
+    position's logits ``(B, V)`` and the advanced state.
+    """
+
+    def body(st, tok):  # tok: (B,)
+        logits, st = forward_decode(params, cfg, st, tok[:, None])
+        return st, logits
+
+    state, logits = jax.lax.scan(body, state, jnp.moveaxis(tokens, 1, 0))
+    return logits[-1], state
+
+
+# --------------------------------------------------------------------------
 # prefill: full-sequence forward that also fills the decode caches
 # --------------------------------------------------------------------------
 def forward_prefill(

@@ -1,0 +1,67 @@
+"""Cooperative inference serving: coalesce live ego-network requests
+into shared minibatch plans.
+
+    from repro.data.recsys import make_recsys
+    from repro.serve import GNNServer, ServeConfig, poisson_trace
+
+    ds = make_recsys()
+    server = GNNServer(ds.graph, ds.features, gnn_cfg, params,
+                       ServeConfig(policy="hybrid", max_batch=64))
+    report = server.serve_trace(
+        poisson_trace(500, rate_rps=2000, seed_pool=ds.user_ids))
+    print(report.summary())
+
+Layer map: ``queue`` (arrival traces + FIFO queue), ``coalesce``
+(admission policies, bucket ladder, seed merging, retrace guard),
+``server`` (the plan/gather/forward loop with latency + fetch
+accounting).  See docs/serving.md.
+"""
+from repro.serve.coalesce import (
+    POLICIES,
+    BucketedJit,
+    BucketLadder,
+    CoalescedBatch,
+    Coalescer,
+    HybridPolicy,
+    MaxBatchPolicy,
+    MaxWaitPolicy,
+    RetraceError,
+    make_policy,
+)
+from repro.serve.queue import (
+    Request,
+    RequestQueue,
+    bursty_trace,
+    make_trace,
+    poisson_trace,
+)
+from repro.serve.server import (
+    BatchRecord,
+    GNNServer,
+    ServeConfig,
+    ServedRequest,
+    ServeReport,
+)
+
+__all__ = [
+    "BatchRecord",
+    "BucketLadder",
+    "BucketedJit",
+    "CoalescedBatch",
+    "Coalescer",
+    "GNNServer",
+    "HybridPolicy",
+    "MaxBatchPolicy",
+    "MaxWaitPolicy",
+    "POLICIES",
+    "Request",
+    "RequestQueue",
+    "RetraceError",
+    "ServeConfig",
+    "ServeReport",
+    "ServedRequest",
+    "bursty_trace",
+    "make_policy",
+    "make_trace",
+    "poisson_trace",
+]

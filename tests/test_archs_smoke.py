@@ -100,6 +100,54 @@ def test_train_decode_consistency(arch):
     assert err < 3e-3, err
 
 
+@pytest.mark.parametrize(
+    "arch", ["mamba2-2.7b", "hymba-1.5b", "gemma2-2b"]
+)
+def test_prefill_decode_bit_identical_to_stepping(arch):
+    """Batched prefill == stepping the decoder token by token, exactly.
+
+    Pins the ``examples/serve_lm.py`` prefill path exactly as the
+    example runs it (both halves jitted): ``prefill_decode`` scans the
+    same per-token decode step, so the final logits, the decode state,
+    and every greedy token that follows must be bit-identical to
+    stepping the jitted ``serve_step`` over the prompt — not
+    approximately equal.
+    """
+    from repro.models.transformer import prefill_decode
+
+    cfg = get_config(arch).reduced(ssm_chunk=8, window=8)
+    params = init_lm(jax.random.PRNGKey(3), cfg)
+    rng = np.random.default_rng(3)
+    S0, new = 12, 6
+    toks = jnp.asarray(rng.integers(0, cfg.vocab_size, (B, S0)), jnp.int32)
+    serve = jax.jit(make_serve_step(cfg))
+    prefill = jax.jit(lambda p, st, t: prefill_decode(p, cfg, st, t))
+
+    def greedy(logits, state, n):
+        out = []
+        tok = jnp.argmax(logits, -1)[:, None].astype(jnp.int32)
+        for _ in range(n):
+            out.append(np.asarray(tok)[:, 0])
+            logits, state = serve(params, state, tok)
+            tok = jnp.argmax(logits, -1)[:, None].astype(jnp.int32)
+        return np.stack(out, 1)
+
+    state_a = init_decode_state(cfg, B, S0 + new)
+    logits_a, state_a = prefill(params, state_a, toks)
+
+    state_b = init_decode_state(cfg, B, S0 + new)
+    logits_b = None
+    for t in range(S0):
+        logits_b, state_b = serve(params, state_b, toks[:, t : t + 1])
+
+    assert np.array_equal(np.asarray(logits_a), np.asarray(logits_b))
+    for la, lb in zip(jax.tree_util.tree_leaves(state_a),
+                      jax.tree_util.tree_leaves(state_b)):
+        assert np.array_equal(np.asarray(la), np.asarray(lb))
+    assert np.array_equal(greedy(logits_a, state_a, new),
+                          greedy(logits_b, state_b, new))
+
+
 def test_param_counts_match_published():
     """Sanity anchor: total params land near the published sizes."""
     from repro.models.transformer.config import active_param_count, param_count

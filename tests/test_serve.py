@@ -1,0 +1,315 @@
+"""repro.serve: coalescing inference — identity, ordering, accounting.
+
+The three contracts the subsystem stands on:
+
+1. **Bit-identity** — a seed's prediction is independent of which batch
+   (bucket, policy, cache state) served it, because samplers draw
+   per-vertex hash randomness and the forward is row-wise.
+2. **Admission invariants** — FIFO service, dispatch never precedes
+   arrival, and each policy's defining bound holds on a seeded trace.
+3. **Exact accounting** — the tiered store's counters reconcile with
+   ``FeatureStore.count_fetched`` on the very same id streams.
+"""
+import dataclasses
+
+import jax
+import jax.numpy as jnp
+import numpy as np
+import pytest
+
+from repro.core.feature_loader import FeatureStore
+from repro.core.graph import INVALID
+from repro.data.recsys import make_recsys, recsys_graph
+from repro.engine import EngineConfig
+from repro.models.gnn import GNNConfig, init_gnn
+from repro.serve.coalesce import (
+    POLICIES,
+    BucketedJit,
+    BucketLadder,
+    Coalescer,
+    RetraceError,
+    make_policy,
+)
+from repro.serve.queue import (
+    Request,
+    RequestQueue,
+    bursty_trace,
+    make_trace,
+    poisson_trace,
+)
+from repro.serve.server import GNNServer, ServeConfig
+
+
+@pytest.fixture(scope="module")
+def ds():
+    return make_recsys(num_users=192, num_items=96, edges_per_user=5,
+                       feature_dim=16, max_degree=32, seed=0)
+
+
+@pytest.fixture(scope="module")
+def gnn(ds):
+    return GNNConfig(model="gcn", num_layers=2, in_dim=ds.feature_dim,
+                     hidden_dim=16, num_classes=ds.num_classes)
+
+
+@pytest.fixture(scope="module")
+def params(gnn):
+    return init_gnn(jax.random.PRNGKey(0), gnn)
+
+
+def _server(ds, gnn, params, **overrides):
+    kw = dict(num_layers=2, fanout=4, max_batch=16, min_bucket=8,
+              max_wait_ms=5.0, use_cache=False)
+    kw.update(overrides)
+    return GNNServer(ds.graph, ds.features, gnn, params, ServeConfig(**kw))
+
+
+def _trace(ds, n=60, kind="poisson", rate=4000.0, seed=1):
+    return make_trace(kind, n, rate_rps=rate, seed_pool=ds.user_ids,
+                      seed=seed)
+
+
+# --------------------------------------------------------------------------
+# workload: recsys graph + arrival traces
+# --------------------------------------------------------------------------
+def test_recsys_graph_is_bipartite_and_bounded():
+    g = recsys_graph(num_users=128, num_items=64, edges_per_user=4,
+                     max_degree=16, seed=3)
+    assert g.num_vertices == 128 + 64
+    indptr = np.asarray(g.indptr)
+    indices = np.asarray(g.indices)
+    deg = np.diff(indptr)
+    assert deg.max() <= 16
+    for v in range(g.num_vertices):
+        nbrs = indices[indptr[v]:indptr[v + 1]]
+        if v < 128:      # user -> only items
+            assert (nbrs >= 128).all()
+        else:            # item -> only users
+            assert (nbrs < 128).all()
+
+
+def test_trace_determinism_and_monotone_arrivals(ds):
+    for kind in ("poisson", "bursty"):
+        a = _trace(ds, 40, kind=kind, seed=7)
+        b = _trace(ds, 40, kind=kind, seed=7)
+        assert [(r.rid, r.seed, r.t_arrival) for r in a] == [
+            (r.rid, r.seed, r.t_arrival) for r in b]
+        arrivals = [r.t_arrival for r in a]
+        assert arrivals == sorted(arrivals)
+        assert [r.rid for r in a] == list(range(40))
+        assert all(r.deadline_ms > 0 for r in a)
+        assert all(int(r.seed) in set(map(int, ds.user_ids)) for r in a)
+    c = _trace(ds, 40, kind="poisson", seed=8)
+    assert [r.t_arrival for r in c] != [r.t_arrival for r in a]
+
+
+def test_queue_take_semantics():
+    reqs = [Request(i, seed=10 + i, t_arrival=i * 0.01, deadline_ms=50.0)
+            for i in range(5)]
+    q = RequestQueue(reqs)
+    assert len(q) == 5 and q.peek_time() == 0.0
+    assert q.arrival_time(2) == pytest.approx(0.02)
+    first = q.take(2)
+    assert [r.rid for r in first] == [0, 1]
+    until = q.take_until(0.03, limit=10)
+    assert [r.rid for r in until] == [2, 3]
+    assert [r.rid for r in q.take(5)] == [4]
+    assert not q.pending
+
+
+# --------------------------------------------------------------------------
+# ladder + retrace guard
+# --------------------------------------------------------------------------
+def test_bucket_ladder():
+    lad = BucketLadder.geometric(64, min_bucket=8)
+    assert lad.buckets == (8, 16, 32, 64) and lad.cap == 64
+    assert lad.bucket_for(1) == 8
+    assert lad.bucket_for(8) == 8
+    assert lad.bucket_for(9) == 16
+    assert lad.bucket_for(64) == 64
+    with pytest.raises(ValueError):
+        lad.bucket_for(65)
+    with pytest.raises(ValueError):
+        BucketLadder((16, 8))
+
+
+def test_bucketed_jit_raises_on_retrace():
+    bj = BucketedJit(lambda x: x * 2, lambda x: 8, name="t")
+    bj(jnp.zeros((8,), jnp.float32))
+    bj(jnp.ones((8,), jnp.float32))        # same shape: cached, no trace
+    assert bj.compiles == {8: 1}
+    with pytest.raises(RetraceError):
+        bj(jnp.zeros((16,), jnp.float32))  # same bucket key, new shape
+
+
+def test_coalesce_dedups_and_pads(ds, gnn):
+    base = EngineConfig(mode="independent", num_pes=1, local_batch=8,
+                        num_layers=2, sampler="labor0", fanout=4)
+    co = Coalescer(ds.graph, base, BucketLadder.geometric(16, 8))
+    u = ds.user_ids
+    reqs = [Request(i, seed=int(u[i % 3]), t_arrival=0.0, deadline_ms=50.0)
+            for i in range(6)]
+    batch = co.coalesce(reqs, t_dispatch=0.0)
+    assert batch.bucket == 8 and batch.num_unique == 3
+    valid = batch.seeds[batch.seeds != INVALID]
+    assert sorted(valid) == sorted(set(int(r.seed) for r in reqs))
+    assert (batch.seeds[3:] == INVALID).all()
+    with pytest.raises(ValueError):
+        co.coalesce([], 0.0)
+
+
+# --------------------------------------------------------------------------
+# admission policies: defining bounds on a hand-built queue
+# --------------------------------------------------------------------------
+def _mkreqs(arrivals):
+    return [Request(i, seed=i, t_arrival=t, deadline_ms=50.0)
+            for i, t in enumerate(arrivals)]
+
+
+def test_max_batch_policy_exact_batches():
+    pol = make_policy("max_batch", max_batch=3, max_wait_ms=5.0)
+    q = RequestQueue(_mkreqs([0.00, 0.01, 0.02, 0.03, 0.04]))
+    reqs, t = pol.admit(q, now=0.0)
+    assert [r.rid for r in reqs] == [0, 1, 2]
+    assert t == pytest.approx(0.02)        # third arrival fills the batch
+    reqs, t = pol.admit(q, now=t)
+    assert [r.rid for r in reqs] == [3, 4]  # tail flush at last arrival
+    assert t == pytest.approx(0.04)
+
+
+def test_max_wait_policy_bounds_oldest_age():
+    pol = make_policy("max_wait_ms", max_batch=16, max_wait_ms=5.0)
+    q = RequestQueue(_mkreqs([0.000, 0.002, 0.004, 0.020]))
+    reqs, t = pol.admit(q, now=0.0)
+    # idle server: dispatch exactly when the oldest request ages out
+    assert t == pytest.approx(0.005)
+    assert [r.rid for r in reqs] == [0, 1, 2]
+    assert all(r.t_arrival <= t for r in reqs)
+
+
+def test_hybrid_policy_first_trigger_wins():
+    pol = make_policy("hybrid", max_batch=2, max_wait_ms=5.0)
+    q = RequestQueue(_mkreqs([0.000, 0.001, 0.050]))
+    reqs, t = pol.admit(q, now=0.0)
+    assert [r.rid for r in reqs] == [0, 1]   # batch filled before aging out
+    assert t == pytest.approx(0.001)
+    reqs, t = pol.admit(q, now=t)
+    assert [r.rid for r in reqs] == [2]      # aged out before a 2nd arrival
+    assert t == pytest.approx(0.055)
+
+
+# --------------------------------------------------------------------------
+# served-trace invariants + bit-identity
+# --------------------------------------------------------------------------
+@pytest.fixture(scope="module")
+def indep_report(ds, gnn, params):
+    return _server(ds, gnn, params).serve_independent(_trace(ds))
+
+
+def test_independent_baseline_sanity(indep_report):
+    assert len(indep_report.served) == 60
+    assert all(b.num_requests == 1 for b in indep_report.batches)
+    assert 0.0 <= indep_report.slo_attainment <= 1.0
+
+
+@pytest.mark.parametrize("policy", POLICIES)
+def test_coalesced_bit_identical_to_per_request(ds, gnn, params,
+                                                indep_report, policy):
+    rep = _server(ds, gnn, params, policy=policy).serve_trace(_trace(ds))
+    assert len(rep.served) == len(indep_report.served)
+    ref = {s.request.rid: s.pred for s in indep_report.served}
+    for s in rep.served:
+        assert np.array_equal(s.pred, ref[s.request.rid]), (
+            policy, s.request.rid)
+
+
+def test_bit_identity_survives_warm_cache(ds, gnn, params, indep_report):
+    rep = _server(ds, gnn, params, policy="hybrid",
+                  use_cache=True).serve_trace(_trace(ds))
+    ref = {s.request.rid: s.pred for s in indep_report.served}
+    assert all(np.array_equal(s.pred, ref[s.request.rid])
+               for s in rep.served)
+
+
+@pytest.mark.parametrize("policy", POLICIES)
+def test_ordering_and_deadline_invariants(ds, gnn, params, policy):
+    trace = _trace(ds, kind="bursty", seed=5)
+    rep = _server(ds, gnn, params, policy=policy).serve_trace(trace)
+    by_rid = sorted(rep.served, key=lambda s: s.request.rid)
+    # dispatch never precedes arrival; completion strictly follows dispatch
+    for s in by_rid:
+        assert s.t_dispatch >= s.request.t_arrival - 1e-12
+        assert s.t_complete > s.t_dispatch
+        assert s.met_deadline == (s.latency_ms <= s.request.deadline_ms)
+    # FIFO: arrival order never overtakes batch order
+    idx = [s.batch_index for s in by_rid]
+    assert idx == sorted(idx)
+    disp = [b.t_dispatch for b in rep.batches]
+    assert disp == sorted(disp)
+    if policy == "max_batch":
+        assert all(b.num_requests == 16 for b in rep.batches[:-1])
+    assert all(b.num_requests <= 16 for b in rep.batches)
+    assert all(b.num_unique <= b.num_requests for b in rep.batches)
+
+
+def test_compiles_once_per_bucket_across_traces(ds, gnn, params):
+    srv = _server(ds, gnn, params, policy="hybrid")
+    rep1 = srv.serve_trace(_trace(ds, seed=1))
+    rep2 = srv.serve_trace(_trace(ds, seed=2))  # warm: must not retrace
+    for rep in (rep1, rep2):
+        assert all(n == 1 for n in rep.compiles["serve.plan"].values())
+        assert all(n == 1 for n in rep.compiles["serve.forward"].values())
+    assert set(rep2.compiles["serve.forward"]) <= {8, 16}
+
+
+def test_modeled_clock_is_deterministic(ds, gnn, params):
+    t = _trace(ds, seed=9)
+    a = _server(ds, gnn, params, policy="hybrid").serve_trace(t)
+    b = _server(ds, gnn, params, policy="hybrid").serve_trace(t)
+    assert a.summary() == b.summary()
+    assert np.array_equal(a.latencies_ms(), b.latencies_ms())
+
+
+# --------------------------------------------------------------------------
+# fetched-rows accounting: tiered counters vs the oracle count_fetched
+# --------------------------------------------------------------------------
+def test_cache_accounting_reconciles_with_count_fetched(ds, gnn, params):
+    trace = _trace(ds, seed=4)
+    srv = _server(ds, gnn, params, policy="hybrid", use_cache=True)
+    rep = srv.serve_trace(trace)
+
+    # replay each batch's plan eagerly: the tiered `requested` counter
+    # must equal the oracle's unique-valid count summed over batches
+    oracle = FeatureStore(ds.features)
+    by_batch = {}
+    for s in rep.served:
+        by_batch.setdefault(s.batch_index, []).append(s.request)
+    expect_requested = 0
+    all_ids = []
+    for i in sorted(by_batch):
+        batch = srv.coalescer.coalesce(by_batch[i], t_dispatch=0.0)
+        plan = srv.coalescer.build_plan(batch)
+        ids = np.asarray(plan.input_ids)
+        expect_requested += oracle.count_fetched(ids)
+        all_ids.append(ids.ravel())
+    assert rep.requested_rows == expect_requested
+    assert rep.cache_hits + srv.tiered.misses == rep.requested_rows
+
+    # a cache big enough for every row fetches each distinct row once
+    cap = ds.graph.num_vertices + (-ds.graph.num_vertices % 8)
+    big = _server(ds, gnn, params, policy="hybrid", use_cache=True,
+                  cache_capacity=cap)
+    rep_big = big.serve_trace(trace)
+    ids = np.concatenate(all_ids)
+    global_unique = len(np.unique(ids[ids != INVALID]))
+    assert rep_big.fetched_rows == global_unique
+
+
+def test_per_batch_fetch_counts_without_cache(ds, gnn, params):
+    rep = _server(ds, gnn, params, policy="max_batch").serve_trace(
+        _trace(ds, seed=6))
+    assert rep.fetched_rows == sum(b.fetched_rows for b in rep.batches)
+    assert rep.requested_rows == rep.fetched_rows
+    for b in rep.batches:
+        assert b.fetched_rows >= b.num_unique   # seeds are always inputs
+        assert b.edges > 0
